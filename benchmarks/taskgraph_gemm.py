@@ -1,0 +1,90 @@
+"""Paper §4.8 GEMM test case: blocked C = A·B as an STF task graph.
+
+One task per (i, j, k) block-product with ``SpCommutativeWrite`` on C[i,j]
+(order-free accumulation — the paper's commutative showcase); exports the
+DOT graph and the SVG execution trace like Figure 2, checks the result
+against a single jnp matmul, and reports task throughput.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    SpCommutativeWrite,
+    SpComputeEngine,
+    SpData,
+    SpRead,
+    SpTaskGraph,
+    SpWorkerTeamBuilder,
+)
+
+
+def run_gemm(n: int = 512, block: int = 128, n_workers: int = 4, export: bool = True) -> dict:
+    nb = n // block
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (n, n), jnp.float32)
+    B = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
+
+    a_cells = [[SpData(A[i * block : (i + 1) * block, k * block : (k + 1) * block], f"A{i}{k}") for k in range(nb)] for i in range(nb)]
+    b_cells = [[SpData(B[k * block : (k + 1) * block, j * block : (j + 1) * block], f"B{k}{j}") for j in range(nb)] for k in range(nb)]
+    c_cells = [[SpData(jnp.zeros((block, block), jnp.float32), f"C{i}{j}") for j in range(nb)] for i in range(nb)]
+
+    matmul = jax.jit(lambda a, b, c: c + a @ b)
+
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(n_workers))
+    tg = SpTaskGraph()
+    t0 = time.perf_counter()
+    for i in range(nb):
+        for j in range(nb):
+            for k in range(nb):
+                def body(a, b, c_ref):
+                    c_ref.value = matmul(a, b, c_ref.value)
+
+                tg.task(
+                    SpRead(a_cells[i][k]),
+                    SpRead(b_cells[k][j]),
+                    SpCommutativeWrite(c_cells[i][j]),
+                    body,
+                    name=f"gemm{i}{j}k{k}",
+                )
+    tg.compute_on(eng)
+    tg.wait_all_tasks()
+    wall = time.perf_counter() - t0
+
+    C = jnp.block([[c_cells[i][j].value for j in range(nb)] for i in range(nb)])
+    err = float(jnp.max(jnp.abs(C - A @ B)))
+    if export:
+        import os
+
+        os.makedirs("experiments/artifacts", exist_ok=True)
+        tg.generate_dot("experiments/artifacts/gemm_graph.dot")
+        tg.generate_trace("experiments/artifacts/gemm_trace.svg")
+    eng.stop()
+    n_tasks = nb**3
+    return {
+        "n": n,
+        "block": block,
+        "n_tasks": n_tasks,
+        "wall_s": wall,
+        "tasks_per_s": n_tasks / wall,
+        "max_err": err,
+    }
+
+
+def main() -> dict:
+    r = run_gemm()
+    print(
+        f"gemm n={r['n']} block={r['block']} tasks={r['n_tasks']} "
+        f"wall={r['wall_s'] * 1e3:.1f}ms throughput={r['tasks_per_s']:.0f} tasks/s "
+        f"err={r['max_err']:.2e}"
+    )
+    assert r["max_err"] < 1e-3
+    return r
+
+
+if __name__ == "__main__":
+    main()

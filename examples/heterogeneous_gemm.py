@@ -1,0 +1,72 @@
+"""Heterogeneous blocked GEMM (paper §4.3 + Fig. 2): per-task implementation
+variants — SpRef (XLA) and SpPallas (TPU kernel; interpret-mode here) — with
+the scheduler free to pick per worker kind.  Exports graph + trace.
+
+    PYTHONPATH=src python examples/heterogeneous_gemm.py
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    SpCommutativeWrite,
+    SpComputeEngine,
+    SpData,
+    SpPallas,
+    SpRead,
+    SpRef,
+    SpTaskGraph,
+    SpWorkerTeamBuilder,
+)
+
+
+def main(n: int = 256, block: int = 64) -> None:
+    nb = n // block
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (n, n), jnp.float32)
+    B = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
+
+    a = [[SpData(A[i * block:(i + 1) * block, k * block:(k + 1) * block]) for k in range(nb)] for i in range(nb)]
+    b = [[SpData(B[k * block:(k + 1) * block, j * block:(j + 1) * block]) for j in range(nb)] for k in range(nb)]
+    c = [[SpData(jnp.zeros((block, block))) for _ in range(nb)] for _ in range(nb)]
+
+    xla_mm = jax.jit(lambda x, y, z: z + x @ y)
+
+    def ref_body(x, y, zref):
+        zref.value = xla_mm(x, y, zref.value)
+
+    def pallas_body(x, y, zref):
+        # stand-in for a Pallas matmul kernel: on this CPU container the
+        # point is the per-kind dispatch, so reuse the XLA path
+        zref.value = xla_mm(x, y, zref.value)
+
+    # a mixed team: 3 "CPU" (ref) workers + 1 "device" (pallas) worker
+    ce = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_cuda_workers(3, 1))
+    tg = SpTaskGraph().compute_on(ce)
+    t0 = time.perf_counter()
+    for i in range(nb):
+        for j in range(nb):
+            for k in range(nb):
+                tg.task(
+                    SpRead(a[i][k]), SpRead(b[k][j]), SpCommutativeWrite(c[i][j]),
+                    SpRef(ref_body), SpPallas(pallas_body),
+                    name=f"gemm[{i},{j},{k}]",
+                ).set_task_name(f"C{i}{j}+=A{i}{k}B{k}{j}")
+    tg.wait_all_tasks()
+    wall = time.perf_counter() - t0
+
+    C = jnp.block([[c[i][j].value for j in range(nb)] for i in range(nb)])
+    err = float(jnp.abs(C - A @ B).max())
+    print(f"[gemm] {nb ** 3} tasks in {wall * 1e3:.0f}ms, max err {err:.2e}")
+    tg.generate_dot("/tmp/hetero_gemm.dot")
+    tg.generate_trace("/tmp/hetero_gemm_trace.svg")
+    print("[gemm] exported /tmp/hetero_gemm.dot, /tmp/hetero_gemm_trace.svg")
+    ce.stop()
+    assert err < 1e-3
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Batched serving example (deliverable b): prefill a batch of prompts,
+prime the decode caches, and greedily decode — showing that the model
+reproduces the synthetic affine-rule continuation after a quick fit.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import SyntheticLMDataset
+from repro.models import prefill
+from repro.models.config import ArchConfig, ShapeSpec
+from repro.runtime.serve import build_decode_fn, prime_cache
+from repro.runtime.train import build_train_step, init_train_state
+
+CFG = ArchConfig(
+    name="serve-demo", family="dense", n_layers=4, d_model=192, n_heads=6,
+    n_kv_heads=3, head_dim=32, d_ff=768, vocab=512, act="swiglu",
+    attn_blockwise_min_seq=512,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fit-steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    shape = ShapeSpec("t", "train", 64, args.batch)
+    ds = SyntheticLMDataset(CFG, shape, seed=0)
+
+    # quick fit so generation is meaningful
+    state = init_train_state(jax.random.PRNGKey(0), CFG)
+    art = build_train_step(CFG, lr_schedule=lambda s: jnp.float32(3e-3), donate=False)
+    for i in range(args.fit_steps):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_for_step(i).items()}
+        state, m = art(state, batch)
+    print(f"[serve] fitted {args.fit_steps} steps, loss={float(m['loss']):.3f}")
+
+    # ---- serve a batch of requests ----------------------------------------
+    eval_batch = ds.batch_for_step(10_000)
+    prompts = jnp.asarray(eval_batch["tokens"][:, : args.prompt])
+    gold = np.asarray(eval_batch["tokens"][:, args.prompt : args.prompt + args.gen])
+
+    prefill_fn = jax.jit(lambda p, b: prefill(p, b, CFG))
+    decode_fn = build_decode_fn(CFG)
+
+    t0 = time.perf_counter()
+    logits, caches = prefill_fn(state.params, {"tokens": prompts})
+    max_seq = args.prompt + args.gen
+    caches = prime_cache(CFG, caches, args.prompt, max_seq)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    generated = [tok]
+    for s in range(args.gen - 1):
+        tok, caches = decode_fn(state.params, tok, caches, jnp.int32(args.prompt + s))
+    # decode_fn returns argmax tokens directly
+        generated.append(tok)
+    out = np.concatenate([np.asarray(t) for t in generated], axis=1)
+    dt = time.perf_counter() - t0
+    acc = float((out == gold).mean())
+    toks_per_s = args.batch * args.gen / dt
+    print(f"[serve] generated {args.batch}x{args.gen} tokens in {dt * 1e3:.0f}ms "
+          f"({toks_per_s:.0f} tok/s), continuation accuracy vs rule: {acc:.2%}")
+    assert acc > 0.5, "a fitted model should continue the affine rule"
+
+
+if __name__ == "__main__":
+    main()

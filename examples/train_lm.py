@@ -1,0 +1,85 @@
+"""End-to-end training driver (deliverable b): train a language model on the
+synthetic affine-rule stream and watch the loss collapse.
+
+Default preset is a ~10M-param llama-style model sized for this 1-core CPU
+container (≈2 s/step); ``--preset 100m`` selects the ~100M-parameter
+configuration from the assignment (same code path — on a real accelerator
+it runs a few hundred steps comfortably).
+
+    PYTHONPATH=src python examples/train_lm.py                 # ~10M, 60 steps
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.data import Prefetcher, SyntheticLMDataset
+from repro.models.config import ArchConfig, ShapeSpec
+from repro.optim import linear_warmup_cosine
+from repro.runtime.train import build_train_step, init_train_state
+
+PRESETS = {
+    "10m": ArchConfig(
+        name="lm-10m", family="dense", n_layers=6, d_model=256, n_heads=8,
+        n_kv_heads=4, head_dim=32, d_ff=1024, vocab=8192, act="swiglu",
+        attn_blockwise_min_seq=512,
+    ),
+    "100m": ArchConfig(
+        name="lm-100m", family="dense", n_layers=10, d_model=640, n_heads=10,
+        n_kv_heads=5, head_dim=64, d_ff=2560, vocab=32000, act="swiglu",
+        attn_blockwise_min_seq=1024,
+    ),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="10m", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/train_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    print(f"[lm] {cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+    shape = ShapeSpec("train", "train", args.seq, args.batch)
+    ds = SyntheticLMDataset(cfg, shape, seed=0)
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    art = build_train_step(
+        cfg,
+        n_microbatches=2,
+        lr_schedule=linear_warmup_cosine(args.lr, 10, args.steps),
+        donate=False,
+    )
+    pf = Prefetcher(ds, depth=2)
+    try:
+        t0 = time.perf_counter()
+        first = None
+        for i in range(args.steps):
+            step_idx, batch = pf.get()
+            state, metrics = art(state, {k: jnp.asarray(v) for k, v in batch.items()})
+            loss = float(metrics["loss"])
+            first = first if first is not None else loss
+            if (i + 1) % 10 == 0:
+                dt = (time.perf_counter() - t0) / (i + 1)
+                print(f"[lm] step {i + 1:4d}  loss {loss:7.4f}  {dt * 1e3:7.0f} ms/step", flush=True)
+            if (i + 1) % 50 == 0:
+                mgr.save(i + 1, state)
+        mgr.wait()
+        print(f"[lm] loss {first:.4f} -> {loss:.4f} over {args.steps} steps")
+        assert loss < first, "training should reduce loss on the synthetic rule"
+    finally:
+        pf.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Sharded checkpointing with async commit — the fault-tolerance substrate.
+
+Layout (per step)::
+
+    <dir>/step_000042.tmp/          (written first)
+        MANIFEST.json               (tree structure, shapes, dtypes, crc32s)
+        leaf_00000.npy ...          (one file per pytree leaf)
+    <dir>/step_000042/              (atomic rename on commit)
+
+* **atomicity**: a crash mid-write leaves only a ``.tmp`` dir, which restore
+  ignores and the next save purges — restart always finds a consistent step;
+* **async commit**: device→host transfer happens on the caller thread (the
+  arrays are small views once sharded), serialization+fsync on a background
+  thread, so the train loop resumes immediately (Specx's "background thread
+  progresses I/O" pattern, C4);
+* **integrity**: per-leaf crc32 in the manifest, verified on restore;
+* **retention**: keep the newest ``keep`` checkpoints;
+* **multi-host posture**: each process writes ``shard-<proc>`` files for its
+  addressable shards; on this single-process container that is shard-0 with
+  the full array.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _tree_flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_commit: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_commit = async_commit
+        os.makedirs(directory, exist_ok=True)
+        self._pending: Optional[threading.Thread] = None
+        # purge stale tmp dirs from a previous crash
+        for d in os.listdir(directory):
+            if d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+    # ------------------------------------------------------------------ save
+
+    def save(self, step: int, state: Any, *, block: bool = False) -> None:
+        self.wait()  # one in-flight commit at a time
+        paths, leaves, treedef = _tree_flatten_with_paths(state)
+        host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+
+        def commit():
+            tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:09d}")
+            os.makedirs(tmp, exist_ok=True)
+            manifest = {"step": step, "leaves": []}
+            for i, (p, arr) in enumerate(zip(paths, host_leaves)):
+                fname = f"leaf_{i:05d}.shard-0.npy"
+                np.save(os.path.join(tmp, fname), arr)
+                manifest["leaves"].append(
+                    {
+                        "path": p,
+                        "file": fname,
+                        "shape": list(arr.shape),
+                        "dtype": str(arr.dtype),
+                        "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+                    }
+                )
+            with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._retain()
+
+        if self.async_commit and not block:
+            self._pending = threading.Thread(target=commit, daemon=True)
+            self._pending.start()
+        else:
+            commit()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _retain(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d[5:]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None) -> tuple[int, Any]:
+        """Restore into the structure of ``template`` (a pytree of arrays or
+        ShapeDtypeStructs); device placement/sharding follows the template's
+        shardings when present (elastic re-mesh: pass the NEW shardings)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(d, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        paths, leaves, treedef = _tree_flatten_with_paths(template)
+        by_path = {e["path"]: e for e in manifest["leaves"]}
+        out_leaves = []
+        for p, tmpl in zip(paths, leaves):
+            e = by_path[p]
+            arr = np.load(os.path.join(d, e["file"]))
+            if arr.dtype.kind == "V":
+                # numpy round-trips ml_dtypes (bfloat16, ...) as raw void;
+                # reinterpret via the manifest dtype (registered by jax)
+                import ml_dtypes  # noqa: F401
+
+                arr = arr.view(np.dtype(e["dtype"]))
+            crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+            if crc != e["crc32"]:
+                raise IOError(f"checkpoint corruption in {e['file']} ({p})")
+            sharding = getattr(tmpl, "sharding", None)
+            if sharding is not None and not isinstance(
+                sharding, jax.sharding.SingleDeviceSharding
+            ):
+                out_leaves.append(jax.device_put(arr, sharding))
+            else:
+                out_leaves.append(jax.numpy.asarray(arr))
+        return step, jax.tree_util.tree_unflatten(treedef, out_leaves)

@@ -1,0 +1,75 @@
+"""repro.core — Specx's task-based runtime, adapted to JAX (DESIGN.md §1–2).
+
+Public API mirrors the paper's spelling where sensible::
+
+    from repro.core import (
+        SpTaskGraph, SpSpeculativeModel, SpRuntime,
+        SpData, SpRead, SpWrite, SpCommutativeWrite, SpMaybeWrite, SpAtomicWrite,
+        SpReadArray, SpWriteArray, SpPriority,
+        SpComputeEngine, SpWorkerTeamBuilder,
+        SpCpu, SpCuda, SpRef, SpPallas, SpHost,
+    )
+"""
+from .access import (
+    AccessMode,
+    SpAccess,
+    SpArrayAccess,
+    SpAtomicWrite,
+    SpAtomicWriteArray,
+    SpCommutativeWrite,
+    SpCommutativeWriteArray,
+    SpCpu,
+    SpCuda,
+    SpData,
+    SpHip,
+    SpHost,
+    SpImpl,
+    SpMaybeWrite,
+    SpMaybeWriteArray,
+    SpPallas,
+    SpPriority,
+    SpRead,
+    SpReadArray,
+    SpRef,
+    SpWrite,
+    SpWriteArray,
+    SpWriteRef,
+)
+from .comm import (
+    ChannelHub,
+    SpCommGroup,
+    SpDeserializer,
+    SpSerializer,
+    mpi_broadcast,
+    mpi_recv,
+    mpi_send,
+)
+from .engine import SpComputeEngine, SpWorker, SpWorkerTeam, SpWorkerTeamBuilder
+from .graph import SpRuntime, SpSpeculativeModel, SpTaskGraph
+from .scheduler import (
+    CriticalPathScheduler,
+    FifoScheduler,
+    LifoScheduler,
+    PriorityScheduler,
+    SpAbstractScheduler,
+    WorkStealingScheduler,
+    compute_upward_ranks,
+    make_scheduler,
+)
+from .staged import execute_staged, linearize, schedule_summary
+from .trace import trace_metrics
+from .task import Task, TaskState, TaskView
+
+__all__ = [
+    "AccessMode", "SpAccess", "SpArrayAccess", "SpAtomicWrite", "SpAtomicWriteArray",
+    "SpCommutativeWrite", "SpCommutativeWriteArray", "SpCpu", "SpCuda", "SpData",
+    "SpHip", "SpHost", "SpImpl", "SpMaybeWrite", "SpMaybeWriteArray", "SpPallas",
+    "SpPriority", "SpRead", "SpReadArray", "SpRef", "SpWrite", "SpWriteArray",
+    "SpWriteRef", "ChannelHub", "SpCommGroup", "SpDeserializer", "SpSerializer",
+    "mpi_broadcast", "mpi_recv", "mpi_send", "SpComputeEngine", "SpWorker",
+    "SpWorkerTeam", "SpWorkerTeamBuilder", "SpRuntime", "SpSpeculativeModel",
+    "SpTaskGraph", "CriticalPathScheduler", "FifoScheduler", "LifoScheduler",
+    "PriorityScheduler", "SpAbstractScheduler", "WorkStealingScheduler",
+    "compute_upward_ranks", "make_scheduler", "execute_staged", "linearize",
+    "schedule_summary", "trace_metrics", "Task", "TaskState", "TaskView",
+]

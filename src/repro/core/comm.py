@@ -1,0 +1,325 @@
+"""Communication tasks + background progress thread (paper §4.4).
+
+Specx integrates MPI into the task graph: send/recv become *communication
+tasks* whose execution is delegated to a dedicated background thread that
+starts non-blocking operations, polls them (MPI ``test``-style), and
+releases dependencies as soon as a request completes — "the progression is
+done as early as possible".
+
+Adaptation (DESIGN.md §2): inside one Python process there is no MPI; the
+"wire" is an in-process :class:`ChannelHub` connecting Specx *instances*
+(rank-tagged graph+engine pairs), with the same non-blocking start/test
+protocol so the background-thread design is exercised faithfully.  On a real
+multi-host JAX cluster the hub's role is played by the `jax.distributed`
+transfer layer; in the *staged* backend cross-device communication lowers to
+compiled XLA collectives instead (see ``staged.py`` and
+``repro/dist/collectives.py``).
+
+Note on access modes: the paper's prose says a send "does a write access"
+and a receive "performs a read access"; that is logically inverted (a recv
+must order subsequent readers after it).  We implement send=READ,
+recv=WRITE, which matches the paper's *behavioural* description of
+dependency release.
+
+Speculation is refused on communication (paper §4.4 last paragraph).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Any
+
+import numpy as np
+
+from .access import AccessMode, SpAccess, SpData
+from .graph import SpSpeculativeModel, SpTaskGraph
+from .task import Task, TaskState, TaskView
+
+
+# ---------------------------------------------------------------------------
+# Serialization (paper §4.4 rules 1–3).
+# ---------------------------------------------------------------------------
+
+class SpSerializer:
+    """Utility serializer: packs arrays/scalars into one flat byte buffer —
+    the paper's "single array suitable for communication"."""
+
+    def __init__(self):
+        self._chunks: list[bytes] = []
+
+    def append_array(self, arr) -> None:
+        a = np.asarray(arr)
+        header = f"{a.dtype.str}|{','.join(map(str, a.shape))}|".encode()
+        self._chunks.append(len(header).to_bytes(4, "little") + header + a.tobytes())
+
+    def append_scalar(self, x) -> None:
+        self.append_array(np.asarray(x))
+
+    def buffer(self) -> bytes:
+        return b"".join(self._chunks)
+
+
+class SpDeserializer:
+    def __init__(self, buf: bytes):
+        self._buf = buf
+        self._pos = 0
+
+    def next_array(self) -> np.ndarray:
+        hlen = int.from_bytes(self._buf[self._pos : self._pos + 4], "little")
+        self._pos += 4
+        header = self._buf[self._pos : self._pos + hlen].decode()
+        self._pos += hlen
+        dtype_str, shape_str, _ = header.split("|")
+        shape = tuple(int(s) for s in shape_str.split(",") if s)
+        dt = np.dtype(dtype_str)
+        n = int(np.prod(shape, dtype=np.int64)) * dt.itemsize if shape else dt.itemsize
+        a = np.frombuffer(self._buf[self._pos : self._pos + n], dtype=dt).reshape(shape)
+        self._pos += n
+        return a
+
+
+def pack(obj: Any) -> Any:
+    """Apply the paper's three rules: (1) trivially-copyable values (arrays,
+    scalars, pytrees of them) pass through; (2) objects exposing
+    ``comm_buffer()`` send that buffer; (3) objects with ``sp_serialize``
+    use the serializer."""
+    if hasattr(obj, "sp_serialize"):
+        s = SpSerializer()
+        obj.sp_serialize(s)
+        return ("__serialized__", type(obj), s.buffer())
+    if hasattr(obj, "comm_buffer"):
+        return ("__buffer__", type(obj), obj.comm_buffer())
+    return obj  # rule 1: values are immutable — in-process "copy" is free
+
+
+def unpack(msg: Any) -> Any:
+    if isinstance(msg, tuple) and len(msg) == 3 and msg[0] == "__serialized__":
+        _, cls, buf = msg
+        return cls.sp_deserialize(SpDeserializer(buf))
+    if isinstance(msg, tuple) and len(msg) == 3 and msg[0] == "__buffer__":
+        _, cls, buf = msg
+        return cls.from_comm_buffer(buf)
+    return msg
+
+
+# ---------------------------------------------------------------------------
+# The in-process wire.
+# ---------------------------------------------------------------------------
+
+class ChannelHub:
+    """Mailboxes keyed by (src, dst, tag)."""
+
+    def __init__(self):
+        self._boxes: dict[tuple, collections.deque] = collections.defaultdict(collections.deque)
+        self._lock = threading.Lock()
+
+    def post(self, key: tuple, msg: Any) -> None:
+        with self._lock:
+            self._boxes[key].append(msg)
+
+    def poll(self, key: tuple):
+        """Return (True, msg) if available else (False, None)."""
+        with self._lock:
+            box = self._boxes.get(key)
+            if box:
+                return True, box.popleft()
+        return False, None
+
+
+_default_hub = ChannelHub()
+
+
+class SpCommGroup:
+    """A communicator: (hub, rank, size) — one per Specx 'instance'."""
+
+    def __init__(self, rank: int, size: int, hub: ChannelHub | None = None):
+        self.rank = rank
+        self.size = size
+        self.hub = hub or _default_hub
+        self._bcast_seq = 0  # paper: same broadcasts, same order on all ranks
+
+
+# ---------------------------------------------------------------------------
+# Non-blocking requests.
+# ---------------------------------------------------------------------------
+
+class CommRequest:
+    def test(self) -> bool:
+        raise NotImplementedError
+
+    def complete(self) -> None:
+        pass
+
+
+class _DoneRequest(CommRequest):
+    def test(self) -> bool:
+        return True
+
+
+class _RecvRequest(CommRequest):
+    def __init__(self, hub: ChannelHub, key: tuple, ref):
+        self.hub = hub
+        self.key = key
+        self.ref = ref
+        self._msg = None
+        self._have = False
+
+    def test(self) -> bool:
+        if not self._have:
+            ok, msg = self.hub.poll(self.key)
+            if ok:
+                self._msg = msg
+                self._have = True
+        return self._have
+
+    def complete(self) -> None:
+        self.ref.value = unpack(self._msg)
+
+
+# ---------------------------------------------------------------------------
+# Comm task constructors.
+# ---------------------------------------------------------------------------
+
+def _no_spec(graph: SpTaskGraph) -> None:
+    if graph.spec_model is not SpSpeculativeModel.SP_NO_SPEC:
+        raise ValueError(
+            "MPI-style communications are incompatible with speculative "
+            "execution (paper §4.4); use a SP_NO_SPEC graph."
+        )
+
+
+def mpi_send(graph: SpTaskGraph, group: SpCommGroup, x: SpData, dest: int, tag: int) -> TaskView:
+    _no_spec(graph)
+    acc = SpAccess(x, AccessMode.READ)
+    task = Task({"ref": lambda v: None}, [acc], [("single", acc)],
+                name=f"send(to={dest},tag={tag})", is_comm=True, cost=0.1)
+
+    def start(args):
+        group.hub.post((group.rank, dest, tag), pack(args[0]))
+        return _DoneRequest()
+
+    task.comm_start = start
+    return graph._insert(task)
+
+
+def mpi_recv(graph: SpTaskGraph, group: SpCommGroup, x: SpData, src: int, tag: int) -> TaskView:
+    _no_spec(graph)
+    acc = SpAccess(x, AccessMode.WRITE)
+    task = Task({"ref": lambda v: None}, [acc], [("single", acc)],
+                name=f"recv(from={src},tag={tag})", is_comm=True, cost=0.1)
+
+    def start(args):
+        return _RecvRequest(group.hub, (src, group.rank, tag), args[0])
+
+    task.comm_start = start
+    return graph._insert(task)
+
+
+def mpi_broadcast(graph: SpTaskGraph, group: SpCommGroup, x: SpData, root: int) -> TaskView:
+    """Paper: Specx supports MPI broadcast; all instances must issue the same
+    broadcasts in the same order — enforced via a per-group sequence tag."""
+    _no_spec(graph)
+    seq = group._bcast_seq
+    group._bcast_seq += 1
+    tag = ("bcast", seq)
+    if group.rank == root:
+        acc = SpAccess(x, AccessMode.READ)
+        task = Task({"ref": lambda v: None}, [acc], [("single", acc)],
+                    name=f"bcast(root={root},seq={seq})", is_comm=True, cost=0.1)
+
+        def start(args):
+            msg = pack(args[0])
+            for r in range(group.size):
+                if r != root:
+                    group.hub.post((root, r, tag), msg)
+            return _DoneRequest()
+
+        task.comm_start = start
+    else:
+        acc = SpAccess(x, AccessMode.WRITE)
+        task = Task({"ref": lambda v: None}, [acc], [("single", acc)],
+                    name=f"bcast(root={root},seq={seq})", is_comm=True, cost=0.1)
+
+        def start(args):
+            return _RecvRequest(group.hub, (root, group.rank, tag), args[0])
+
+        task.comm_start = start
+    return graph._insert(task)
+
+
+# ---------------------------------------------------------------------------
+# The background progress thread (one per engine).
+# ---------------------------------------------------------------------------
+
+class CommThread(threading.Thread):
+    """Starts non-blocking ops and polls a request list — the analogue of the
+    paper's MPI thread calling test-any in a loop."""
+
+    _ids = iter(range(1 << 20))
+
+    def __init__(self, engine):
+        super().__init__(name=f"spcomm-{next(CommThread._ids)}", daemon=True)
+        self.engine = engine
+        self._incoming: collections.deque[Task] = collections.deque()
+        self._cv = threading.Condition()
+        self._running = True
+
+    def submit(self, task: Task) -> None:
+        with self._cv:
+            self._incoming.append(task)
+            self._cv.notify()
+
+    def run(self) -> None:
+        in_flight: list[tuple[Task, CommRequest, list]] = []
+        while True:
+            with self._cv:
+                if not self._running and not self._incoming and not in_flight:
+                    return
+                while self._incoming:
+                    task = self._incoming.popleft()
+                    task.state = TaskState.RUNNING
+                    task.t_start = time.perf_counter()
+                    args, writebacks = task.build_args()
+                    req = task.comm_start(args)
+                    in_flight.append((task, req, writebacks))
+                if not in_flight and self._running:
+                    self._cv.wait(timeout=0.05)
+                    continue
+            progressed = False
+            for item in list(in_flight):
+                task, req, writebacks = item
+                if req.test():
+                    req.complete()
+                    for acc, ref in writebacks:
+                        acc.data.value = ref.value
+                    task.t_end = time.perf_counter()
+                    graph = getattr(task, "graph", None)
+                    if graph is not None:
+                        graph.trace_events.append(
+                            {
+                                "task": task.name,
+                                "uid": task.uid,
+                                "worker": self.name,
+                                "t0": task.t_start,
+                                "t1": task.t_end,
+                                "ready": 0,
+                                "comm": True,
+                                "spec": False,
+                            }
+                        )
+                        newly = graph.on_task_finished(task)
+                        task.mark_finished()
+                        self.engine.push_many(newly)
+                    else:  # pragma: no cover
+                        task.mark_finished()
+                    in_flight.remove(item)
+                    progressed = True
+            if not progressed and in_flight:
+                time.sleep(0.0005)
+
+    def stop(self) -> None:
+        with self._cv:
+            self._running = False
+            self._cv.notify()
+        self.join(timeout=5.0)

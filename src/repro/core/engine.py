@@ -1,0 +1,295 @@
+"""Compute engines and teams of workers (paper §4.2).
+
+A :class:`SpComputeEngine` owns a team of workers (threads).  Each worker
+continuously pops tasks from the engine's (pluggable) scheduler and executes
+them.  Engines may drive several task graphs; workers can be *moved between
+engines at runtime* ("dynamically adjust the capabilities of the compute
+engine during execution", paper §4.2).
+
+Communication tasks never run on workers: a dedicated background thread
+starts non-blocking operations and polls for completion, releasing
+dependencies as early as possible (paper §4.4) — see ``comm.py``.
+
+Hardware-adaptation (DESIGN.md §2): worker *kinds* replace CPU-vs-GPU
+workers.  A ``ref`` worker prefers the pure-jnp/XLA implementation of a
+task, a ``pallas`` worker prefers the TPU-kernel implementation (falling
+back to ``ref`` off-TPU), a ``host`` worker is meant for I/O-ish tasks
+(checkpoint commits).  On this CPU container all kinds execute; on a real
+pod the staged backend (``staged.py``) is the production path.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Optional
+
+from .scheduler import FifoScheduler, SpAbstractScheduler, WorkStealingScheduler
+from .task import Task, TaskState
+
+
+class SpWorker(threading.Thread):
+    _ids = iter(range(1 << 30))
+
+    def __init__(self, engine: "SpComputeEngine", kind: str = "ref"):
+        self.wid = next(SpWorker._ids)
+        super().__init__(name=f"spworker-{self.wid}", daemon=True)
+        self.kind = kind
+        self.engine = engine
+        self.target_engine: Optional["SpComputeEngine"] = None  # pending move
+        self.alive = True
+
+    def run(self) -> None:  # pragma: no branch - loop
+        while self.alive:
+            eng = self.engine
+            if self.target_engine is not None:
+                new_eng = self.target_engine
+                self.target_engine = None
+                eng._detach_worker(self)
+                new_eng._attach_worker(self)
+                continue
+            task = eng._next_task(self)
+            if task is None:
+                continue  # woke for stop/move
+            eng._execute(task, self)
+
+    def retire(self) -> None:
+        self.alive = False
+
+
+class SpWorkerTeam:
+    """A collection of workers assignable to compute engines."""
+
+    def __init__(self, kinds: list[str]):
+        self.kinds = kinds
+
+    def __len__(self) -> int:
+        return len(self.kinds)
+
+
+class SpWorkerTeamBuilder:
+    """Paper-spelling builders (Code 5)."""
+
+    @staticmethod
+    def default_num_threads() -> int:
+        return max(2, min(8, os.cpu_count() or 2))
+
+    DefaultNumThreads = default_num_threads
+
+    @staticmethod
+    def team_of_cpu_workers(n: int | None = None) -> SpWorkerTeam:
+        n = n or SpWorkerTeamBuilder.default_num_threads()
+        return SpWorkerTeam(["ref"] * n)
+
+    TeamOfCpuWorkers = team_of_cpu_workers
+
+    @staticmethod
+    def team_of_cpu_cuda_workers(n_cpu: int | None = None, n_dev: int = 1) -> SpWorkerTeam:
+        """Mixed team: ``ref`` workers + ``pallas``(device-kernel) workers."""
+        n_cpu = n_cpu or SpWorkerTeamBuilder.default_num_threads()
+        return SpWorkerTeam(["ref"] * n_cpu + ["pallas"] * n_dev)
+
+    TeamOfCpuCudaWorkers = team_of_cpu_cuda_workers
+
+
+class SpComputeEngine:
+    def __init__(
+        self,
+        team: SpWorkerTeam | None = None,
+        scheduler: SpAbstractScheduler | None = None,
+        name: str = "ce",
+    ):
+        self.name = name
+        self.scheduler = scheduler or FifoScheduler()
+        self._cv = threading.Condition()
+        self._running = True
+        self._workers: list[SpWorker] = []
+        self._graphs: list = []
+        self._comm = None  # lazily created CommThread (comm.py)
+        team = team or SpWorkerTeamBuilder.team_of_cpu_workers()
+        for kind in team.kinds:
+            w = SpWorker(self, kind)
+            self._workers.append(w)
+            w.start()
+
+    # ------------------------------------------------------------- graph API
+
+    def register_graph(self, graph) -> None:
+        with self._cv:
+            if graph not in self._graphs:
+                self._graphs.append(graph)
+
+    @staticmethod
+    def _is_async_comm(task: Task) -> bool:
+        # only tasks with a non-blocking start protocol go to the comm
+        # thread; comm-*flagged* compute tasks (staged scheduling hints)
+        # run on normal workers
+        return task.is_comm and hasattr(task, "comm_start")
+
+    def push_task(self, task: Task) -> None:
+        if self._is_async_comm(task):
+            self._comm_thread().submit(task)
+            return
+        with self._cv:
+            self.scheduler.push(task)
+            self._cv.notify()
+
+    def push_many(self, tasks: list[Task]) -> None:
+        if not tasks:
+            return
+        with self._cv:
+            n = 0
+            for t in tasks:
+                if self._is_async_comm(t):
+                    self._comm_thread().submit(t)
+                else:
+                    self.scheduler.push(t)
+                    n += 1
+            if n:
+                self._cv.notify(n)
+
+    # ------------------------------------------------------------ worker side
+
+    def _next_task(self, worker: SpWorker) -> Optional[Task]:
+        with self._cv:
+            while self._running and worker.alive and worker.target_engine is None:
+                if isinstance(self.scheduler, WorkStealingScheduler):
+                    t = self.scheduler.pop(worker.kind, worker.name)
+                else:
+                    t = self.scheduler.pop(worker.kind)
+                if t is not None:
+                    return t
+                self._cv.wait(timeout=0.1)
+        return None
+
+    def _execute(self, task: Task, worker: SpWorker) -> None:
+        graph = getattr(task, "graph", None)
+        token = getattr(task, "cancel_token", None)
+        if token is not None and token.is_set():
+            on_cancel = getattr(task, "on_cancel", None)
+            if on_cancel is not None:
+                try:
+                    on_cancel(task)
+                except BaseException as e:  # pragma: no cover - defensive
+                    task.exception = e
+            task.mark_cancelled()
+            if graph is not None:
+                self.push_many(graph.on_task_finished(task))
+            return
+
+    # paper §4.7: commutative accesses require runtime mutual exclusion;
+    # multi-handle locks are taken in sorted-uid order (deadlock freedom).
+        locks = []
+        if graph is not None:
+            from .access import AccessMode
+
+            comm_handles = sorted(
+                (
+                    graph.registry.handle_for(a.data)
+                    for a in task.accesses
+                    if a.mode is AccessMode.COMMUTATIVE_WRITE
+                ),
+                key=lambda h: h.data.uid,
+            )
+            locks = [h.commutative_lock for h in comm_handles]
+        for lk in locks:
+            lk.acquire()
+        task.state = TaskState.RUNNING
+        task.worker_name = worker.name
+        task.t_start = time.perf_counter()
+        try:
+            task.run(preferred_impl=worker.kind)
+        except BaseException as e:
+            task.exception = e
+        finally:
+            task.t_end = time.perf_counter()
+            for lk in reversed(locks):
+                lk.release()
+        if token is not None:
+            token.set(task)
+        if graph is not None:
+            graph.trace_events.append(
+                {
+                    "task": task.name,
+                    "uid": task.uid,
+                    "worker": worker.name,
+                    "t0": task.t_start,
+                    "t1": task.t_end,
+                    "ready": len(self.scheduler),
+                    "comm": task.is_comm,
+                    "spec": task.speculative,
+                }
+            )
+            newly = graph.on_task_finished(task)
+            task.mark_finished()
+            self.push_many(newly)
+        else:  # pragma: no cover - tasks always carry a graph backref
+            task.mark_finished()
+
+    # ------------------------------------------------------------- team mgmt
+
+    @property
+    def n_workers(self) -> int:
+        return len(self._workers)
+
+    def _attach_worker(self, w: SpWorker) -> None:
+        with self._cv:
+            self._workers.append(w)
+            w.engine = self
+            self._cv.notify()
+
+    def _detach_worker(self, w: SpWorker) -> None:
+        with self._cv:
+            if w in self._workers:
+                self._workers.remove(w)
+
+    def add_workers(self, n: int, kind: str = "ref") -> None:
+        for _ in range(n):
+            w = SpWorker(self, kind)
+            with self._cv:
+                self._workers.append(w)
+            w.start()
+
+    def send_workers_to(self, other: "SpComputeEngine", n: int) -> int:
+        """Move up to ``n`` workers to ``other`` (paper §4.2 dynamic teams)."""
+        moved = 0
+        with self._cv:
+            movable = [w for w in self._workers if w.target_engine is None]
+            for w in movable[:n]:
+                w.target_engine = other
+                moved += 1
+            self._cv.notify_all()
+        return moved
+
+    # ------------------------------------------------------------------ comm
+
+    def _comm_thread(self):
+        if self._comm is None:
+            from .comm import CommThread
+
+            self._comm = CommThread(self)
+            self._comm.start()
+        return self._comm
+
+    # ------------------------------------------------------------------ stop
+
+    def stop(self) -> None:
+        with self._cv:
+            self._running = False
+            for w in self._workers:
+                w.alive = False
+            self._cv.notify_all()
+        me = threading.current_thread()
+        for w in list(self._workers):
+            if w is not me:
+                w.join(timeout=5.0)
+        if self._comm is not None:
+            self._comm.stop()
+
+    stopIfNotAlreadyStopped = stop
+
+    def __enter__(self) -> "SpComputeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -1,0 +1,190 @@
+"""Pluggable schedulers (paper §4.5).
+
+Specx adopts StarPU's two-function contract: ``push(task)`` when a task
+becomes ready, ``pop(worker)`` when a worker is available.  New schedulers
+are classes deriving from :class:`SpAbstractScheduler` — no runtime changes
+needed (the paper's explicit design goal).
+
+Shipped policies:
+
+* :class:`FifoScheduler` — the paper's default.
+* :class:`LifoScheduler` — depth-first; better cache reuse on chains.
+* :class:`PriorityScheduler` — honors :class:`~repro.core.access.SpPriority`.
+* :class:`CriticalPathScheduler` — HEFT-flavoured: pops the ready task with
+  the longest downstream cost (upward rank); ranks are computed by
+  :func:`compute_upward_ranks` over the finished graph (used by the staged
+  backend and by benchmarks; in eager streaming mode it degrades gracefully
+  to priority order).
+* :class:`WorkStealingScheduler` — per-worker deques with random steal.
+
+The same policies drive the *staged* backend's linearization
+(:func:`repro.core.staged.linearize`), where "scheduling" means choosing the
+program order of the compiled SPMD step (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import collections
+import heapq
+import itertools
+import random
+import threading
+from typing import Optional
+
+from .task import Task
+
+
+class SpAbstractScheduler:
+    """Interface: push / pop / __len__.  Implementations must be thread-safe
+    (the engine calls them under its own condition variable, but requeues and
+    multi-graph use can interleave)."""
+
+    def push(self, task: Task) -> None:
+        raise NotImplementedError
+
+    def pop(self, worker_kind: str = "ref") -> Optional[Task]:
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+
+class FifoScheduler(SpAbstractScheduler):
+    """First-in-first-out — Specx's current default (paper §4.5)."""
+
+    def __init__(self):
+        self._q: collections.deque[Task] = collections.deque()
+        self._lock = threading.Lock()
+
+    def push(self, task: Task) -> None:
+        with self._lock:
+            self._q.append(task)
+
+    def pop(self, worker_kind: str = "ref") -> Optional[Task]:
+        with self._lock:
+            return self._q.popleft() if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class LifoScheduler(SpAbstractScheduler):
+    def __init__(self):
+        self._q: collections.deque[Task] = collections.deque()
+        self._lock = threading.Lock()
+
+    def push(self, task: Task) -> None:
+        with self._lock:
+            self._q.append(task)
+
+    def pop(self, worker_kind: str = "ref") -> Optional[Task]:
+        with self._lock:
+            return self._q.pop() if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class PriorityScheduler(SpAbstractScheduler):
+    """Max-heap on ``task.priority``; FIFO among equal priorities."""
+
+    def __init__(self):
+        self._heap: list[tuple[int, int, Task]] = []
+        self._lock = threading.Lock()
+        self._counter = itertools.count()
+
+    def push(self, task: Task) -> None:
+        with self._lock:
+            heapq.heappush(self._heap, (-task.priority, next(self._counter), task))
+
+    def pop(self, worker_kind: str = "ref") -> Optional[Task]:
+        with self._lock:
+            if not self._heap:
+                return None
+            return heapq.heappop(self._heap)[2]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+class CriticalPathScheduler(PriorityScheduler):
+    """Pops by upward rank when available (``task._rank``), else priority.
+
+    Use :func:`compute_upward_ranks` once the graph is fully inserted to fill
+    ranks; in streaming mode unranked tasks fall back to their priority.
+    """
+
+    def push(self, task: Task) -> None:
+        rank = getattr(task, "_rank", None)
+        key = rank if rank is not None else float(task.priority)
+        with self._lock:
+            heapq.heappush(self._heap, (-key, next(self._counter), task))
+
+
+class WorkStealingScheduler(SpAbstractScheduler):
+    """Per-worker deques; owner pops LIFO, thieves steal FIFO."""
+
+    def __init__(self, seed: int = 0):
+        self._deques: dict[str, collections.deque[Task]] = collections.defaultdict(collections.deque)
+        self._lock = threading.Lock()
+        self._rng = random.Random(seed)
+        self._rr = itertools.count()
+
+    def push(self, task: Task) -> None:
+        with self._lock:
+            keys = list(self._deques.keys())
+            if keys:
+                owner = keys[next(self._rr) % len(keys)]
+            else:
+                owner = "w0"
+            self._deques[owner].append(task)
+
+    def pop(self, worker_kind: str = "ref", worker_name: str = "w0") -> Optional[Task]:
+        with self._lock:
+            dq = self._deques.get(worker_name)
+            if dq:
+                return dq.pop()
+            victims = [k for k, d in self._deques.items() if d]
+            if not victims:
+                return None
+            victim = self._rng.choice(victims)
+            return self._deques[victim].popleft()
+
+    def __len__(self) -> int:
+        return sum(len(d) for d in self._deques.values())
+
+
+def compute_upward_ranks(tasks: list[Task], successors: dict[int, list[Task]]) -> None:
+    """HEFT upward rank: rank(t) = cost(t) + max over successors of rank(s).
+
+    ``successors`` maps task uid → successor tasks (derivable from the graph
+    via :meth:`SpTaskGraph.successor_map`).  Sets ``task._rank`` in place.
+    """
+    memo: dict[int, float] = {}
+
+    order = list(tasks)
+    # iterative reverse-topological accumulation (tasks are inserted in a
+    # valid topological order by STF construction, so reverse insertion
+    # order is a valid reverse-topological order)
+    for t in sorted(order, key=lambda x: x.inserted_index, reverse=True):
+        succ = successors.get(t.uid, ())
+        best = 0.0
+        for s in succ:
+            best = max(best, memo.get(s.uid, 0.0))
+        memo[t.uid] = t.cost + best
+        t._rank = memo[t.uid]
+
+
+SCHEDULERS = {
+    "fifo": FifoScheduler,
+    "lifo": LifoScheduler,
+    "priority": PriorityScheduler,
+    "critical_path": CriticalPathScheduler,
+    "work_stealing": WorkStealingScheduler,
+}
+
+
+def make_scheduler(name: str, **kw) -> SpAbstractScheduler:
+    try:
+        return SCHEDULERS[name](**kw)
+    except KeyError:
+        raise ValueError(f"unknown scheduler {name!r}; have {sorted(SCHEDULERS)}") from None

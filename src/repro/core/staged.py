@@ -1,0 +1,108 @@
+"""Staged backend: compile an STF task graph into a single SPMD program.
+
+This is the TPU-native half of the adaptation (DESIGN.md §2).  On a pod
+there are no worker threads to balance — but there *is* a program order to
+choose.  The scheduler's freedom (order among ready tasks, placement of
+commutative writes, hoisting of communication) becomes the *instruction
+schedule of the compiled step*:
+
+1. build an :class:`~repro.core.graph.SpTaskGraph` whose cells hold JAX
+   tracers (inside a ``jax.jit``-traced function);
+2. :func:`linearize` it — a Kahn topological sort whose tie-break is the
+   pluggable scheduling policy;
+3. :func:`execute_staged` runs the task bodies in that order, threading
+   values through the cells — producing a jaxpr whose op order follows the
+   schedule.  XLA's latency-hiding scheduler then overlaps the hoisted
+   collectives with adjacent compute.
+
+Policies:
+
+* ``fifo``          — insertion order (paper default; the sequential order).
+* ``priority``      — SpPriority-descending among ready tasks.
+* ``critical_path`` — HEFT upward rank (longest downstream cost first).
+* ``overlap``       — communication-first: a ready comm task is always
+  issued before ready compute tasks, so collectives start as early as the
+  dependence structure allows (the compiled analogue of the paper's
+  background thread progressing communication "as early as possible").
+"""
+from __future__ import annotations
+
+import collections
+import heapq
+import itertools
+from typing import Callable
+
+from .graph import SpTaskGraph
+from .scheduler import compute_upward_ranks
+from .task import Task
+
+
+def linearize(graph: SpTaskGraph, policy: str = "fifo") -> list[Task]:
+    """Total order of ``graph.tasks`` respecting the STF partial order."""
+    succ = graph.successor_map()
+    pred = graph.predecessor_counts()
+    if policy == "critical_path":
+        compute_upward_ranks(graph.tasks, succ)
+
+    counter = itertools.count()
+
+    def key(t: Task):
+        if policy == "fifo":
+            return t.inserted_index
+        if policy == "priority":
+            return (-t.priority, t.inserted_index)
+        if policy == "critical_path":
+            return (-getattr(t, "_rank", 0.0), t.inserted_index)
+        if policy == "overlap":
+            return (0 if t.is_comm else 1, t.inserted_index)
+        raise ValueError(f"unknown staged policy {policy!r}")
+
+    heap: list = []
+    for t in graph.tasks:
+        if pred.get(t.uid, 0) == 0:
+            heapq.heappush(heap, (key(t), next(counter), t))
+
+    order: list[Task] = []
+    done: set[int] = set()
+    while heap:
+        _, _, t = heapq.heappop(heap)
+        if t.uid in done:  # pragma: no cover - defensive
+            continue
+        done.add(t.uid)
+        order.append(t)
+        for s in succ.get(t.uid, ()):
+            pred[s.uid] -= 1
+            if pred[s.uid] == 0:
+                heapq.heappush(heap, (key(s), next(counter), s))
+    if len(order) != len(graph.tasks):
+        raise RuntimeError(
+            f"linearize produced {len(order)} of {len(graph.tasks)} tasks — cycle?"
+        )
+    return order
+
+
+def execute_staged(
+    graph: SpTaskGraph, policy: str = "fifo", impl: str = "ref"
+) -> list[Task]:
+    """Run every task body sequentially in the linearized order.
+
+    Safe under ``jax.jit`` tracing when all task bodies are trace-pure
+    (jnp-only).  Cell values after the call hold the outputs (tracers when
+    traced).  Returns the schedule for introspection.
+    """
+    order = linearize(graph, policy)
+    for t in order:
+        t.run(preferred_impl=impl)
+    return order
+
+
+def schedule_summary(order: list[Task]) -> dict:
+    """Small introspection helper used by tests and EXPERIMENTS.md §Perf:
+    positions of comm tasks in the schedule (earlier = more overlap room)."""
+    comm_pos = [i for i, t in enumerate(order) if t.is_comm]
+    return {
+        "n_tasks": len(order),
+        "n_comm": len(comm_pos),
+        "comm_positions": comm_pos,
+        "mean_comm_pos": (sum(comm_pos) / len(comm_pos)) if comm_pos else None,
+    }

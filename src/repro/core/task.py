@@ -1,0 +1,219 @@
+"""Tasks and task viewers (paper §4.1, §4.3).
+
+A task owns: its access list, a priority, one callable per implementation
+kind (``ref`` / ``pallas`` / ``host`` — the SpCpu/SpCuda adaptation, see
+DESIGN.md §2 C3), and bookkeeping for readiness, execution and tracing.
+
+Calling convention (DESIGN.md §2): the callable receives one argument per
+declared access, in declaration order — the raw value for ``SpRead``, an
+:class:`~repro.core.access.SpWriteRef` proxy for write-like modes, and a
+list thereof for ``Sp*Array`` accesses.  The callable's return value is the
+task's *result* (paper: "getting the value produced by the task"),
+independent of the writes — mirroring C++ reference semantics.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Any, Callable, Optional, Sequence
+
+from .access import AccessMode, SpAccess, SpImpl, SpWriteRef
+
+_task_ids = itertools.count()
+
+
+class TaskState:
+    NOT_READY = "not-ready"
+    READY = "ready"
+    RUNNING = "running"
+    FINISHED = "finished"
+    CANCELLED = "cancelled"  # straggler-mitigation loser (DESIGN.md §2 C6)
+
+
+class Task:
+    """Internal task object.  Users interact through :class:`TaskView`."""
+
+    def __init__(
+        self,
+        impls: dict[str, Callable],
+        accesses: Sequence[SpAccess],
+        arg_layout: Sequence[tuple[str, Any]],
+        priority: int = 0,
+        name: str | None = None,
+        *,
+        is_comm: bool = False,
+        cost: float = 1.0,
+        speculative: bool = False,
+    ):
+        self.uid = next(_task_ids)
+        self.name = name or f"task{self.uid}"
+        self.impls = impls  # kind -> callable
+        self.accesses = list(accesses)
+        # arg_layout: how to build callable arguments: list of
+        # ("single", SpAccess) | ("array", [SpAccess, ...]) in declaration order
+        self.arg_layout = list(arg_layout)
+        self.priority = priority
+        self.is_comm = is_comm
+        self.cost = cost  # scheduler cost estimate (CriticalPath)
+        self.speculative = speculative
+
+        self.state = TaskState.NOT_READY
+        self.pending = 0  # number of handle-generations not yet active
+        self._pending_lock = threading.Lock()
+        self.result: Any = None
+        self.exception: BaseException | None = None
+        self._done_event = threading.Event()
+        # trace metadata
+        self.worker_name: str | None = None
+        self.t_start: float = 0.0
+        self.t_end: float = 0.0
+        # maybe-write outcomes, filled after execution: SpData uid -> bool
+        self.maybe_written: dict[int, bool] = {}
+        # successors cache for dot export (filled lazily by graph)
+        self.inserted_index: int = -1
+
+    # -- readiness bookkeeping --------------------------------------------------
+
+    def add_pending(self, n: int = 1) -> None:
+        with self._pending_lock:
+            self.pending += n
+
+    def dec_pending(self) -> bool:
+        """Decrement; return True when the task just became ready."""
+        with self._pending_lock:
+            self.pending -= 1
+            ready = self.pending == 0 and self.state == TaskState.NOT_READY
+            if ready:
+                self.state = TaskState.READY
+            return ready
+
+    # -- execution ---------------------------------------------------------------
+
+    def pick_impl(self, preferred: str = "ref") -> Callable:
+        if preferred in self.impls:
+            return self.impls[preferred]
+        if "ref" in self.impls:
+            return self.impls["ref"]
+        # any impl
+        return next(iter(self.impls.values()))
+
+    def build_args(self) -> tuple[list, list[tuple[SpAccess, SpWriteRef]]]:
+        """Materialize callable arguments.  Returns (args, writebacks)."""
+        args: list = []
+        writebacks: list[tuple[SpAccess, SpWriteRef]] = []
+        for kind, payload in self.arg_layout:
+            if kind == "single":
+                acc: SpAccess = payload
+                if acc.mode is AccessMode.READ:
+                    args.append(acc.data.value)
+                else:
+                    ref = SpWriteRef(acc.data.value, acc.data.name)
+                    writebacks.append((acc, ref))
+                    args.append(ref)
+            else:  # "array"
+                sub_args = []
+                for acc in payload:
+                    if acc.mode is AccessMode.READ:
+                        sub_args.append(acc.data.value)
+                    else:
+                        ref = SpWriteRef(acc.data.value, acc.data.name)
+                        writebacks.append((acc, ref))
+                        sub_args.append(ref)
+                args.append(sub_args)
+        return args, writebacks
+
+    def run(self, preferred_impl: str = "ref") -> None:
+        """Execute the task body and write back results.  No dependency
+        release here — the engine/graph drives that."""
+        fn = self.pick_impl(preferred_impl)
+        args, writebacks = self.build_args()
+        self.result = fn(*args)
+        for acc, ref in writebacks:
+            if acc.mode is AccessMode.MAYBE_WRITE:
+                self.maybe_written[acc.data.uid] = ref.written
+                if ref.written:
+                    acc.data.value = ref.value
+            else:
+                # WRITE / COMMUTATIVE / ATOMIC: adopt the proxy value.  If the
+                # body never assigned, the value is unchanged (identity write).
+                acc.data.value = ref.value
+
+    def mark_finished(self) -> None:
+        self.state = TaskState.FINISHED
+        self._done_event.set()
+
+    def mark_cancelled(self) -> None:
+        self.state = TaskState.CANCELLED
+        self._done_event.set()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        return self._done_event.wait(timeout)
+
+    @property
+    def is_done(self) -> bool:
+        return self._done_event.is_set()
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"Task({self.name!r}, {self.state}, prio={self.priority})"
+
+
+class TaskView:
+    """User-facing viewer (paper §4.1 "Task Viewer").
+
+    Allows naming the task, waiting for completion and fetching the produced
+    value.  The paper notes the pitfall that names may be set after execution
+    — unchanged here, and equally harmless.
+    """
+
+    __slots__ = ("_task",)
+
+    def __init__(self, task: Task):
+        self._task = task
+
+    def set_task_name(self, name: str) -> "TaskView":
+        self._task.name = name
+        return self
+
+    # C++ API spelling
+    setTaskName = set_task_name
+
+    def get_task_name(self) -> str:
+        return self._task.name
+
+    def wait(self, timeout: float | None = None) -> bool:
+        ok = self._task.wait(timeout)
+        if self._task.exception is not None:
+            raise self._task.exception
+        return ok
+
+    def get_value(self) -> Any:
+        self.wait()
+        return self._task.result
+
+    getValue = get_value
+
+    @property
+    def state(self) -> str:
+        return self._task.state
+
+    @property
+    def task(self) -> Task:
+        return self._task
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"TaskView({self._task.name!r}, {self._task.state})"
+
+
+def normalize_impls(raw: Sequence) -> dict[str, Callable]:
+    """Accept bare callables (→ ref) and SpImpl wrappers."""
+    impls: dict[str, Callable] = {}
+    for item in raw:
+        if isinstance(item, SpImpl):
+            impls[item.kind] = item.fn
+        elif callable(item):
+            impls.setdefault("ref", item)
+        else:  # pragma: no cover - defensive
+            raise TypeError(f"not a callable or SpImpl: {item!r}")
+    if not impls:
+        raise ValueError("task needs at least one callable")
+    return impls

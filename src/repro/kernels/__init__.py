@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the compute hot-spots (DESIGN.md §6).
+
+Specx itself is runtime infrastructure — its "kernels" are whatever the
+tasks run.  In this adaptation the perf-critical task bodies are the
+attention/SSD/norm inner loops, so each gets a TPU kernel:
+
+* ``flash_attention``  — causal/windowed GQA attention, online softmax,
+  (bq × bk) VMEM tiles, scratch-carried stats across the KV grid dim.
+* ``decode_attention`` — one-token attention against a long KV cache,
+  block-accumulated with masked slots (flash-decoding structure).
+* ``ssd``              — Mamba-2 intra-chunk SSD matmuls per (batch, head,
+  chunk) tile; the short inter-chunk recurrence stays in jnp.
+* ``rmsnorm``          — fused RMS-normalize + scale epilogue.
+
+Every kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd wrapper + platform dispatch) and ``ref.py`` (pure-jnp oracle);
+tests sweep shapes/dtypes in interpret mode against the oracle.
+"""

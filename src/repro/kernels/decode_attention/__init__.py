@@ -1,0 +1,4 @@
+from . import ops, ref
+from .kernel import decode_attention_pallas
+
+__all__ = ["ops", "ref", "decode_attention_pallas"]

@@ -1,0 +1,34 @@
+"""Wrapper + dispatch for the decode-attention kernel."""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .kernel import decode_attention_pallas
+
+
+def available() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, block_s: int = 512):
+    """q (B, 1, H, Dh) model layout; caches (B, S, KH, D·) model layout."""
+    out = decode_attention_pallas(
+        q[:, 0],
+        k_cache.transpose(0, 2, 1, 3),
+        v_cache.transpose(0, 2, 1, 3),
+        pos,
+        block_s=block_s,
+        interpret=_interpret(),
+    )
+    return out[:, None]
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    return ref.decode_attention_ref(
+        q[:, 0], k_cache.transpose(0, 2, 1, 3), v_cache.transpose(0, 2, 1, 3), pos
+    )[:, None]

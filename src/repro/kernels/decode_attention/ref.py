@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for decode attention (one token vs KV cache)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,        # (B, H, Dh)
+    k_cache: jax.Array,  # (B, KH, S, Dh)
+    v_cache: jax.Array,  # (B, KH, S, Dv)
+    pos: jax.Array,      # scalar int32: slots <= pos are valid
+) -> jax.Array:
+    B, H, Dh = q.shape
+    KH, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, k_cache.astype(jnp.float32)) / math.sqrt(Dh)
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, v_cache.shape[-1]).astype(q.dtype)

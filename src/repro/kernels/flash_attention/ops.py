@@ -1,0 +1,53 @@
+"""Jit'd wrapper + platform dispatch for the flash-attention kernel.
+
+Models call :func:`flash_attention` with (B, L, H, Dh)-layout tensors (the
+framework layout); this adapter transposes to the kernel's (B, H, L, Dh)
+layout, dispatches to Pallas on TPU (interpret mode elsewhere when forced),
+and falls back to the pure-jnp reference otherwise.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import flash_attention_pallas
+
+
+def available() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS_INTERPRET"):
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(
+    q: jax.Array,  # (B, L, H, Dh) — model layout
+    k: jax.Array,  # (B, L, KH, Dh)
+    v: jax.Array,  # (B, L, KH, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    out = flash_attention_pallas(
+        qt, kt, vt, causal=causal, window=window, q_offset=q_offset,
+        interpret=_interpret(),
+    )
+    return out.swapaxes(1, 2)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, q_offset=0):
+    return ref.attention_ref(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal=causal, window=window, q_offset=q_offset,
+    ).swapaxes(1, 2)

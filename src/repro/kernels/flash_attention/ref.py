@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, H, Lq, Dh)
+    k: jax.Array,  # (B, KH, Lk, Dh)
+    v: jax.Array,  # (B, KH, Lk, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    B, H, Lq, Dh = q.shape
+    KH, Lk = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, Lq, Dh).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) / math.sqrt(Dh)
+    qpos = q_offset + jnp.arange(Lq)
+    kpos = jnp.arange(Lk)
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w, v.astype(jnp.float32))
+    return out.reshape(B, H, Lq, v.shape[-1]).astype(q.dtype)

@@ -1,0 +1,4 @@
+from . import ops, ref
+from .kernel import rmsnorm_pallas
+
+__all__ = ["ops", "ref", "rmsnorm_pallas"]

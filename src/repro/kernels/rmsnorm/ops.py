@@ -1,0 +1,27 @@
+"""Wrapper + dispatch for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .kernel import rmsnorm_pallas
+
+
+def available() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    """x (..., D) → normalized, any leading dims."""
+    lead = x.shape[:-1]
+    D = x.shape[-1]
+    flat = x.reshape(-1, D)
+    out = rmsnorm_pallas(flat, scale, eps, interpret=_interpret())
+    return out.reshape(*lead, D)
+
+
+rmsnorm_ref = ref.rmsnorm_ref

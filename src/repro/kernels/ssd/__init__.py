@@ -1,0 +1,4 @@
+from . import ops, ref
+from .kernel import ssd_intra_chunk_pallas
+
+__all__ = ["ops", "ref", "ssd_intra_chunk_pallas"]

@@ -1,0 +1,59 @@
+"""Wrapper: full chunked SSD built on the intra-chunk Pallas kernel plus the
+jnp inter-chunk recurrence — drop-in for models.ssm.ssd_chunked."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_intra_chunk_pallas
+
+
+def available() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd_chunked_pallas(xh, dt, A, Bc, Cc, chunk: int, initial_state=None):
+    """Same contract as repro.models.ssm.ssd_chunked (xh (B,L,H,P), dt (B,L,H),
+    A (H,), Bc/Cc (B,L,H,N))."""
+    B_, L, H, P = xh.shape
+    N = Bc.shape[-1]
+    nc = L // chunk
+    lg = dt * A  # (B,L,H)
+    r4 = lambda t: t.reshape(B_, nc, chunk, H, -1).transpose(0, 3, 1, 2, 4).reshape(B_ * H, nc, chunk, -1)
+    r3 = lambda t: t.reshape(B_, nc, chunk, H).transpose(0, 3, 1, 2).reshape(B_ * H, nc, chunk)
+    cum = jnp.cumsum(lg.reshape(B_, nc, chunk, H), axis=2).reshape(B_, L, H)
+
+    y_intra, states = ssd_intra_chunk_pallas(
+        r4(xh), r3(dt), r3(cum), r4(Bc), r4(Cc), interpret=_interpret()
+    )  # (BH, nc, cs, P), (BH, nc, N, P)
+
+    # inter-chunk recurrence (jnp): S_c = exp(cum_end_c)·S_{c-1} + state_c
+    cum_end = r3(cum)[:, :, -1]  # (BH, nc)
+    s0 = (
+        initial_state.reshape(B_ * H, N, P).astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((B_ * H, N, P), jnp.float32)
+    )
+
+    def body(s_prev, inp):
+        dec, st = inp
+        return s_prev * jnp.exp(dec)[:, None, None] + st, s_prev
+
+    s_final, s_prevs = jax.lax.scan(
+        body, s0, (cum_end.swapaxes(0, 1), states.swapaxes(0, 1))
+    )
+    s_prevs = s_prevs.swapaxes(0, 1)  # (BH, nc, N, P)
+
+    y_inter = jnp.einsum(
+        "xcin,xci,xcnp->xcip",
+        r4(Cc).astype(jnp.float32),
+        jnp.exp(r3(cum)),
+        s_prevs,
+    )
+    y = (y_intra + y_inter).reshape(B_, H, nc, chunk, P).transpose(0, 2, 3, 1, 4)
+    y = y.reshape(B_, L, H, P)
+    return y, s_final.reshape(B_, H, N, P)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel.
+
+Given one chunk's inputs (per batch·head tile), computes
+* ``y_intra``  — the causal decay-weighted attention-like contribution
+* ``state``    — the end-of-chunk state  Σ_j exp(cum_last − cum_j)·dt_j·B_j x_jᵀ
+which the jnp inter-chunk recurrence then combines.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(
+    x: jax.Array,   # (cs, P)
+    dt: jax.Array,  # (cs,)
+    cum: jax.Array,  # (cs,) cumulative log-decay within the chunk
+    B: jax.Array,   # (cs, N)
+    C: jax.Array,   # (cs, N)
+):
+    cs = x.shape[0]
+    xf, dtf, cumf = x.astype(jnp.float32), dt.astype(jnp.float32), cum.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    diff = cumf[:, None] - cumf[None, :]
+    ii = jnp.arange(cs)
+    L = jnp.where(ii[:, None] >= ii[None, :], jnp.exp(diff), 0.0)
+    scores = (Cf @ Bf.T) * L * dtf[None, :]
+    y = scores @ xf  # (cs, P)
+    decay_end = jnp.exp(cumf[-1] - cumf)
+    state = (Bf * (decay_end * dtf)[:, None]).T @ xf  # (N, P)
+    return y, state

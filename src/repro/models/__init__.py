@@ -1,0 +1,32 @@
+from repro.models.config import (
+    ArchConfig,
+    HybridConfig,
+    MLAConfig,
+    MoEConfig,
+    SHAPES,
+    ShapeSpec,
+    SSMConfig,
+    applicable_shapes,
+)
+from repro.models.transformer import (
+    abstract_cache,
+    abstract_inputs,
+    abstract_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    input_defs,
+    loss_fn,
+    model_defs,
+    param_shardings,
+    prefill,
+)
+
+__all__ = [
+    "ArchConfig", "HybridConfig", "MLAConfig", "MoEConfig", "SHAPES",
+    "ShapeSpec", "SSMConfig", "applicable_shapes", "abstract_cache",
+    "abstract_inputs", "abstract_params", "decode_step", "forward",
+    "init_cache", "init_params", "input_defs", "loss_fn", "model_defs",
+    "param_shardings", "prefill",
+]

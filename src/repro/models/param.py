@@ -1,0 +1,127 @@
+"""Parameter definition system — single source of truth for shapes, logical
+sharding axes, and initializers.
+
+Each model module exposes ``*_defs(cfg) -> dict[str, ParamDef | dict]``;
+from one defs tree we derive:
+
+* :func:`init_tree` — materialized arrays (smoke tests, examples);
+* :func:`abstract_tree` — ``ShapeDtypeStruct`` stand-ins (dry-run; no
+  allocation, the shannon/kernels pattern);
+* :func:`axes_tree` / :func:`sharding_tree` — logical axes → NamedShardings
+  for ``jax.jit`` in_shardings.
+
+Scanned layer stacks: :func:`stack_defs` prepends a ``layers`` dimension.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import current_mesh, named_sharding
+
+
+@dataclass
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | embed | small
+    dtype: Optional[str] = None  # None → model dtype
+    scale: Optional[float] = None  # stddev override
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} / axes {self.axes} rank mismatch")
+
+
+def stack_defs(defs, n: int):
+    """Prepend a scanned ``layers`` dimension to every leaf."""
+    if isinstance(defs, ParamDef):
+        return ParamDef((n,) + defs.shape, ("layers",) + defs.axes, defs.init, defs.dtype, defs.scale)
+    if isinstance(defs, (list, tuple)):
+        return type(defs)(stack_defs(v, n) for v in defs)
+    return {k: stack_defs(v, n) for k, v in defs.items()}
+
+
+def _is_leaf(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _map_defs(fn, defs):
+    if _is_leaf(defs):
+        return fn(defs)
+    if isinstance(defs, (list, tuple)):
+        return type(defs)(_map_defs(fn, v) for v in defs)
+    return {k: _map_defs(fn, v) for k, v in defs.items()}
+
+
+def _stddev(d: ParamDef) -> float:
+    if d.scale is not None:
+        return d.scale
+    shape = d.shape
+    # ignore leading layer-stack dim for fan-in purposes
+    core = shape[1:] if (d.axes and d.axes[0] == "layers" and len(shape) > 1) else shape
+    if d.init == "embed":
+        return 1.0
+    fan_in = core[0] if len(core) >= 2 else max(core[-1], 1)
+    return 1.0 / math.sqrt(max(fan_in, 1))
+
+
+def init_tree(defs, rng: jax.Array, dtype: str = "bfloat16"):
+    """Materialize parameters (host-scale configs only)."""
+    leaves: list[ParamDef] = []
+    _map_defs(lambda d: leaves.append(d) or d, defs)
+    keys = jax.random.split(rng, max(len(leaves), 1))
+    it = iter(range(len(leaves)))
+
+    def mk(d: ParamDef):
+        dt = jnp.dtype(d.dtype or dtype)
+        i = next(it)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dt)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dt)
+        if d.init == "const":
+            return jnp.full(d.shape, d.scale or 0.0, dt)
+        std = _stddev(d)
+        return (jax.random.normal(keys[i], d.shape, jnp.float32) * std).astype(dt)
+
+    return _map_defs(mk, defs)
+
+
+def abstract_tree(defs, dtype: str = "bfloat16"):
+    """ShapeDtypeStruct tree, sharded when a mesh context is active."""
+
+    def mk(d: ParamDef):
+        dt = jnp.dtype(d.dtype or dtype)
+        sh = named_sharding(d.shape, d.axes) if current_mesh() is not None else None
+        return jax.ShapeDtypeStruct(d.shape, dt, sharding=sh)
+
+    return _map_defs(mk, defs)
+
+
+def axes_tree(defs):
+    return _map_defs(lambda d: d.axes, defs)
+
+
+def sharding_tree(defs):
+    """NamedSharding tree (requires an active mesh context)."""
+    return _map_defs(lambda d: named_sharding(d.shape, d.axes), defs)
+
+
+def count_params(defs) -> int:
+    total = 0
+
+    def acc(d: ParamDef):
+        nonlocal total
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+        return d
+
+    _map_defs(acc, defs)
+    return total

@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block — recurrentgemma-9b / Griffin [arXiv:2402.19427].
+
+The Griffin recurrent block: in-proj to two branches — a GeLU gate branch
+and a (causal conv → RG-LRU) branch — multiplied and projected out.  The
+RG-LRU recurrence per channel::
+
+    r_t = σ(W_a u_t + b_a)          (recurrence gate)
+    i_t = σ(W_x u_t + b_x)          (input gate)
+    log a_t = −c · softplus(Λ) · r_t          (c = 8)
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ u_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the sequence (the
+pair combine (a₂a₁, a₂b₁+b₂)); decode is the single-step update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.config import ArchConfig
+from repro.models.param import ParamDef
+
+_C = 8.0
+
+
+def rglru_defs(cfg: ArchConfig) -> dict:
+    h = cfg.hybrid
+    D = cfg.d_model
+    W = h.lru_width or D
+    return {
+        "in_x": ParamDef((D, W), ("embed", "ff")),
+        "in_gate": ParamDef((D, W), ("embed", "ff")),
+        "conv_w": ParamDef((h.conv_width, W), (None, "ff")),
+        "conv_b": ParamDef((W,), ("ff",), init="zeros"),
+        "w_a": ParamDef((W, W), (None, "ff")),
+        "b_a": ParamDef((W,), ("ff",), init="zeros"),
+        "w_x": ParamDef((W, W), (None, "ff")),
+        "b_x": ParamDef((W,), ("ff",), init="zeros"),
+        "Lambda": ParamDef((W,), ("ff",), init="const", scale=4.0),
+        "out_proj": ParamDef((W, D), ("ff", "embed")),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array, state=None):
+    Wd = w.shape[0]
+    if state is not None:
+        u_full = jnp.concatenate([state, u], axis=1)
+    else:
+        u_full = jnp.pad(u, ((0, 0), (Wd - 1, 0), (0, 0)))
+    L = u.shape[1]
+    y = sum(u_full[:, i : i + L] * w[i] for i in range(Wd))
+    new_state = u_full[:, -(Wd - 1) :]
+    return y + b, new_state
+
+
+def _gates(p: dict, u: jax.Array):
+    """u (B,L,W) → (log_a (fp32), gated input (fp32))."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", uf, p["w_a"].astype(jnp.float32)) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", uf, p["w_x"].astype(jnp.float32)) + p["b_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["Lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * (i * uf)
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0=None):
+    """h_t = a_t h_{t−1} + b_t over axis 1 via associative scan."""
+    if h0 is not None:
+        # fold the initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_apply(p: dict, x: jax.Array, cfg: ArchConfig, *, want_cache: bool = False):
+    """Griffin recurrent block; x (B,L,D) → (y (B,L,D), cache|None)."""
+    gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", x, p["in_gate"]), approximate=True)
+    u = jnp.einsum("bld,dw->blw", x, p["in_x"])
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, u)
+    h = rglru_scan(a, b)
+    y = (h.astype(x.dtype) * gate)
+    out = jnp.einsum("blw,wd->bld", y, p["out_proj"])
+    out = shard(out, "batch", "act_seq", None)
+    if want_cache:
+        return out, {"h": h[:, -1].astype(jnp.float32), "conv": conv_state}
+    return out, None
+
+
+def rglru_decode_step(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig):
+    """x (B,1,D); cache {'h': (B,W) fp32, 'conv': (B,conv_width-1,W)}."""
+    gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", x, p["in_gate"]), approximate=True)
+    u = jnp.einsum("bld,dw->blw", x, p["in_x"])
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], state=cache["conv"])
+    a, b = _gates(p, u)
+    h = a[:, 0] * cache["h"] + b[:, 0]  # (B,W)
+    y = h[:, None].astype(x.dtype) * gate
+    out = jnp.einsum("blw,wd->bld", y, p["out_proj"])
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,222 @@
+"""Mamba-2 SSD (state-space duality) layer — mamba2-130m [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: within chunks the output is
+an attention-like masked matmul (MXU-friendly); across chunks a short
+recurrence over per-chunk states (lax.scan over L/chunk steps).  Decode is
+the O(1) state update.  ``repro/kernels/ssd`` holds the Pallas version of
+the intra-chunk kernel; this module is the pure-jnp reference path.
+
+Shapes: x (B, L, D) → in_proj → z (gate), xh (B,L,H,P), B̄/C̄ (B,L,G,N),
+dt (B,L,H); state (B,H,P,N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.config import ArchConfig
+from repro.models.param import ParamDef
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return s, d_in, n_heads
+
+
+def ssm_defs(cfg: ArchConfig) -> dict:
+    s, d_in, H = _dims(cfg)
+    D = cfg.d_model
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return {
+        "in_proj": ParamDef((D, 2 * d_in + 2 * s.n_groups * s.d_state + H), ("embed", "ff")),
+        "conv_w": ParamDef((4, conv_ch), (None, "ff")),
+        "conv_b": ParamDef((conv_ch,), ("ff",), init="zeros"),
+        "A_log": ParamDef((H,), (None,), init="ones"),
+        "D": ParamDef((H,), (None,), init="ones"),
+        "dt_bias": ParamDef((H,), (None,), init="const", scale=-4.0),
+        "norm": ParamDef((d_in,), ("ff",), init="zeros"),
+        "out_proj": ParamDef((d_in, D), ("ff", "embed")),
+    }
+
+
+def _split_proj(p: dict, x: jax.Array, cfg: ArchConfig):
+    s, d_in, H = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    zxbcdt = jnp.einsum("bld,df->blf", x, p["in_proj"])
+    z, xh, Bc, Cc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, xh, Bc, Cc, dt
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array, state=None):
+    """Depthwise causal conv, width 4, via shifted adds.  u (B, L, C).
+    If ``state`` (B, 3, C) is given (decode), prepends it."""
+    W = w.shape[0]
+    if state is not None:
+        u_full = jnp.concatenate([state, u], axis=1)
+    else:
+        u_full = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    L = u.shape[1]
+    y = sum(u_full[:, i : i + L] * w[i] for i in range(W))
+    new_state = u_full[:, -(W - 1) :] if W > 1 else None
+    return jax.nn.silu(y + b), new_state
+
+
+def _expand_groups(t: jax.Array, H: int, G: int, N: int) -> jax.Array:
+    """(B, L, G*N) → (B, L, H, N) broadcasting groups across their heads."""
+    B, L, _ = t.shape
+    t = t.reshape(B, L, G, N)
+    return jnp.repeat(t, H // G, axis=2)
+
+
+def ssd_chunked(xh, dt, A, Bc, Cc, chunk: int, initial_state=None):
+    """Chunked SSD scan.  xh (B,L,H,P), dt (B,L,H) [post-softplus],
+    A (H,) [negative], Bc/Cc (B,L,H,N).  Returns (y (B,L,H,P), final_state).
+    """
+    B, L, H, P = xh.shape
+    N = Bc.shape[-1]
+    L0 = L
+    if L % chunk:
+        # pad to a chunk multiple: dt=0 padding means decay exp(0)=1 and zero
+        # state update — the recurrence is unaffected, padded y is discarded
+        pad = chunk - L % chunk
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xh, dt, Bc, Cc = zpad(xh), zpad(dt), zpad(Bc), zpad(Cc)
+        L = L + pad
+    nc = L // chunk
+
+    r = lambda t: t.reshape((B, nc, chunk) + t.shape[2:])
+    xc, dtc, Bcc, Ccc = r(xh), r(dt), r(Bc), r(Cc)
+    lg = dtc * A  # (B,nc,cs,H) log-decay, negative
+    cum = jnp.cumsum(lg, axis=2)  # within-chunk cumulative decay
+
+    # ---- intra-chunk (the "attention-like" quadratic part) ------------------
+    # decay matrix Lmat[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,i,j,H)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    Lmat = jnp.where(causal, jnp.exp(diff), 0.0)  # fp32
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ccc.astype(jnp.float32), Bcc.astype(jnp.float32))
+    w = scores * Lmat * dtc[:, :, None, :, :]  # weight x_j by dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc.astype(jnp.float32))
+
+    # ---- per-chunk states ----------------------------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,cs,H)
+    states = jnp.einsum(
+        "bcjhn,bcjh,bcjhp->bchnp",
+        Bcc.astype(jnp.float32),
+        (decay_to_end * dtc).astype(jnp.float32),
+        xc.astype(jnp.float32),
+    )  # (B,nc,H,N,P)
+
+    # ---- inter-chunk recurrence ---------------------------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+    s0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((B, H, N, P), jnp.float32)
+    )
+
+    def body(s_prev, inp):
+        dec, st = inp  # dec (B,H), st (B,H,N,P)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    (s_final, s_prevs) = jax.lax.scan(
+        body, s0, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1))
+    )
+    s_prevs = s_prevs.swapaxes(0, 1)  # (B,nc,H,N,P) state entering each chunk
+
+    # ---- inter-chunk contribution --------------------------------------------
+    y_inter = jnp.einsum(
+        "bcihn,bcih,bchnp->bcihp",
+        Ccc.astype(jnp.float32),
+        jnp.exp(cum),
+        s_prevs,
+    )
+    y = (y_intra + y_inter).reshape(B, L, H, P)
+    return y[:, :L0], s_final
+
+
+def ssd_naive(xh, dt, A, Bc, Cc, initial_state=None):
+    """O(L) sequential recurrence — test oracle for ``ssd_chunked``."""
+    B, L, H, P = xh.shape
+    N = Bc.shape[-1]
+    s = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((B, H, N, P), jnp.float32)
+    )
+
+    def body(s, t):
+        x_t, dt_t, B_t, C_t = t
+        a = jnp.exp(dt_t * A)  # (B,H)
+        upd = jnp.einsum("bhn,bh,bhp->bhnp", B_t, dt_t, x_t)
+        s = s * a[..., None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", C_t, s)
+        return s, y
+
+    xs = (
+        xh.swapaxes(0, 1).astype(jnp.float32),
+        dt.swapaxes(0, 1).astype(jnp.float32),
+        Bc.swapaxes(0, 1).astype(jnp.float32),
+        Cc.swapaxes(0, 1).astype(jnp.float32),
+    )
+    s_final, ys = jax.lax.scan(body, s, xs)
+    return ys.swapaxes(0, 1), s_final
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return yf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+
+
+def ssm_apply(p: dict, x: jax.Array, cfg: ArchConfig, *, want_cache: bool = False):
+    """Training / prefill path.  x (B,L,D) → (y (B,L,D), cache|None)."""
+    s, d_in, H = _dims(cfg)
+    z, xh, Bc, Cc, dt = _split_proj(p, x, cfg)
+    conv_in = jnp.concatenate([xh, Bc, Cc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xh, Bc, Cc = jnp.split(conv_out, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+    B_, L, _ = x.shape
+    xh = xh.reshape(B_, L, H, s.head_dim)
+    Bh = _expand_groups(Bc, H, s.n_groups, s.d_state)
+    Ch = _expand_groups(Cc, H, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, s_final = ssd_chunked(xh, dt, A, Bh, Ch, chunk=min(s.chunk_size, L))
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(B_, L, d_in)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps).astype(x.dtype)
+    out = jnp.einsum("blf,fd->bld", y, p["out_proj"])
+    out = shard(out, "batch", "act_seq", None)
+    if want_cache:
+        return out, {"state": s_final.astype(jnp.float32), "conv": conv_state}
+    return out, None
+
+
+def ssm_decode_step(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig):
+    """x (B,1,D); cache {'state': (B,H,N,P) fp32, 'conv': (B,3,C)}."""
+    s, d_in, H = _dims(cfg)
+    z, xh, Bc, Cc, dt = _split_proj(p, x, cfg)
+    conv_in = jnp.concatenate([xh, Bc, Cc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"], state=cache["conv"])
+    xh, Bc, Cc = jnp.split(conv_out, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+    B_ = x.shape[0]
+    xh = xh.reshape(B_, 1, H, s.head_dim)[:, 0]
+    Bh = _expand_groups(Bc, H, s.n_groups, s.d_state)[:, 0]
+    Ch = _expand_groups(Cc, H, s.n_groups, s.d_state)[:, 0]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))[:, 0]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)  # (B,H)
+    upd = jnp.einsum("bhn,bh,bhp->bhnp", Bh.astype(jnp.float32), dt, xh.astype(jnp.float32))
+    state = cache["state"] * a[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), state)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(B_, 1, d_in)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps).astype(x.dtype)
+    out = jnp.einsum("blf,fd->bld", y, p["out_proj"])
+    return out, {"state": state, "conv": conv_state}

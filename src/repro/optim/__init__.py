@@ -1,0 +1,18 @@
+from .optimizer import (
+    TrainState,
+    adamw_init,
+    adamw_update,
+    adafactor_init,
+    adafactor_update,
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+)
+from .schedule import constant_schedule, cosine_schedule, linear_warmup_cosine
+
+__all__ = [
+    "TrainState", "adamw_init", "adamw_update", "adafactor_init",
+    "adafactor_update", "clip_by_global_norm", "global_norm",
+    "make_optimizer", "constant_schedule", "cosine_schedule",
+    "linear_warmup_cosine",
+]

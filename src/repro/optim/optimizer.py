@@ -1,0 +1,164 @@
+"""Optimizers: AdamW (opt-state dtype knob) and factored Adafactor.
+
+Self-contained (no optax) so the dry-run controls every byte of optimizer
+state: for ≥100B-param configs the ``opt_state_dtype`` knob (fp32 → bf16
+m/v) is part of the memory budget in EXPERIMENTS.md §Dry-run.
+
+Optimizer state inherits the parameter's NamedSharding (same tree shape),
+so ZeRO-3-style FSDP falls out of the param sharding rules.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    step: jax.Array  # int32 scalar
+    params: Any
+    opt: Any  # optimizer state pytree
+
+
+# ---------------------------------------------------------------------------
+# utils
+# ---------------------------------------------------------------------------
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, dtype: str = "float32"):
+    dt = jnp.dtype(dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+
+def adamw_update(
+    grads,
+    state,
+    params,
+    *,
+    lr,
+    step,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1.0 - b1**t
+    c2 = 1.0 - b2**t
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        vf = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+        mh = mf / c1
+        vh = vf / c2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_p = jax.tree.map(lambda t3: t3[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t3: t3[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t3: t3[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments for ≥2-D params)
+# ---------------------------------------------------------------------------
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return jax.tree.map(init, params, is_leaf=lambda x: not isinstance(x, dict))
+
+
+def adafactor_update(
+    grads,
+    state,
+    params,
+    *,
+    lr,
+    step,
+    d: float = 1.0,
+    eps: float = 1e-30,
+    weight_decay: float = 0.0,
+):
+    t = (step + 1).astype(jnp.float32)
+    beta2 = 1.0 - t ** (-0.8)
+
+    def upd(g, s, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if "vr" in s:
+            vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :] / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], eps)
+            )
+            upd_ = gf / jnp.maximum(denom, eps)
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * s["v"] + (1 - beta2) * g2
+            upd_ = gf / jnp.sqrt(jnp.maximum(v, eps))
+            new_s = {"v": v}
+        # update clipping by RMS (Adafactor d=1)
+        rms = jnp.sqrt(jnp.mean(jnp.square(upd_)) + eps)
+        upd_ = upd_ / jnp.maximum(1.0, rms / d)
+        new_p = (p.astype(jnp.float32) - lr * (upd_ + weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+        return new_p, new_s
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state)
+    outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_s = treedef.unflatten([o[1] for o in outs])
+    return new_p, new_s
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+def make_optimizer(kind: str, opt_state_dtype: str = "float32"):
+    """→ (init_fn(params), update_fn(grads, opt, params, lr, step))."""
+    if kind == "adamw":
+        return (
+            lambda params: adamw_init(params, opt_state_dtype),
+            lambda g, s, p, lr, step: adamw_update(g, s, p, lr=lr, step=step),
+        )
+    if kind == "adafactor":
+        return (
+            adafactor_init,
+            lambda g, s, p, lr, step: adafactor_update(g, s, p, lr=lr, step=step),
+        )
+    raise ValueError(f"unknown optimizer {kind!r}")

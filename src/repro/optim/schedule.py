@@ -1,0 +1,28 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.float32(lr) * (final_frac + (1 - final_frac) * cos)
+
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine_schedule(lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.float32(lr) * jnp.minimum(s / max(warmup, 1), 1.0)
+        return jnp.where(s < warmup, warm, cos(step - warmup))
+
+    return fn

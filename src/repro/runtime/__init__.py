@@ -1,0 +1,12 @@
+from .train import TrainStepArtifacts, build_train_step, train_state_shardings, abstract_train_state
+from .serve import build_decode_fn, build_prefill_fn, build_serve_step
+
+__all__ = [
+    "TrainStepArtifacts",
+    "build_train_step",
+    "train_state_shardings",
+    "abstract_train_state",
+    "build_decode_fn",
+    "build_prefill_fn",
+    "build_serve_step",
+]

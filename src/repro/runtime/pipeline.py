@@ -1,0 +1,173 @@
+"""Pipeline parallelism as an STF task graph (the PP axis of DP/TP/PP/EP/SP).
+
+GPipe-style microbatch pipelining is *exactly* the paper's model: stage
+executions are tasks, activations are the data dependencies, gradient
+accumulation across microbatches is commutative, and the schedule (GPipe
+fill-drain vs 1F1B) is nothing but the scheduler's choice among ready tasks
+— expressed here with ``SpPriority`` so the standard priority scheduler
+produces a 1F1B-flavoured order, while FIFO degrades to fill-drain.
+
+Task structure for S stages × M microbatches::
+
+    F[s,m]:  SpRead(params_s), SpRead(act[s-1,m])
+             → SpWrite(act[s,m]), SpWrite(vjp[s,m])
+    L[m]:    SpRead(params_head), SpRead(act[S-1,m])
+             → SpWrite(dact[S-1,m]), SpCommutativeWrite(grads_head, loss)
+    B[s,m]:  SpRead(vjp[s,m]), SpRead(dact[s,m])
+             → SpWrite(dact[s-1,m]), SpCommutativeWrite(grads_s)
+
+On a real pod each stage's team is a mesh slice and the act hand-offs are
+collective-permutes; on this container stages map to worker threads and the
+hand-off is the SpData cell itself — the schedule/bubble structure is
+identical and measured by ``trace_metrics`` (bubble fraction).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    SpCommutativeWrite,
+    SpComputeEngine,
+    SpData,
+    SpPriority,
+    SpRead,
+    SpTaskGraph,
+    SpWrite,
+)
+
+
+def pipeline_value_and_grad(
+    stage_fns: Sequence[Callable],
+    head_fn: Callable,
+    stage_params: Sequence[Any],
+    head_params: Any,
+    microbatches: Sequence[Any],
+    engine: SpComputeEngine,
+    *,
+    schedule: str = "1f1b",
+) -> tuple[jax.Array, list, Any, SpTaskGraph]:
+    """Run a pipelined forward+backward over ``microbatches``.
+
+    stage_fns[s](params_s, x) -> x';  head_fn(params_h, x, mb) -> scalar loss.
+    Returns (mean loss, per-stage grads, head grads, the graph — for
+    trace_metrics / exports).
+    """
+    S, M = len(stage_fns), len(microbatches)
+    tg = SpTaskGraph().compute_on(engine)
+
+    p_cells = [SpData(p, f"stage{s}.params") for s, p in enumerate(stage_params)]
+    ph_cell = SpData(head_params, "head.params")
+    act = [[SpData(None, f"act[{s}][{m}]") for m in range(M)] for s in range(S)]
+    vjp = [[SpData(None, f"vjp[{s}][{m}]") for m in range(M)] for s in range(S)]
+    dact = [[SpData(None, f"dact[{s}][{m}]") for m in range(M)] for s in range(S)]
+    g_cells = [
+        SpData(jax.tree.map(lambda t: jnp.zeros_like(t, jnp.float32), p), f"grads{s}")
+        for s, p in enumerate(stage_params)
+    ]
+    gh_cell = SpData(
+        jax.tree.map(lambda t: jnp.zeros_like(t, jnp.float32), head_params), "grads.head"
+    )
+    loss_cell = SpData(jnp.float32(0.0), "loss")
+    mb_cells = [SpData(mb, f"mb{m}") for m, mb in enumerate(microbatches)]
+
+    def prio(kind: str, s: int, m: int) -> int:
+        if schedule == "1f1b":
+            # backward beats forward; earlier microbatches beat later; deeper
+            # stages first for backward (drain), shallower first for forward
+            base = 10_000 if kind == "b" else 0
+            return base + (M - m) * 100 + (s if kind == "b" else S - s)
+        return 0  # fifo / fill-drain
+
+    # ---- forward tasks -------------------------------------------------------
+    for m in range(M):
+        for s in range(S):
+            src = mb_cells[m] if s == 0 else act[s - 1][m]
+
+            def fwd(p, x_in, a_ref, v_ref, _s=s):
+                x_val = x_in["x"] if _s == 0 and isinstance(x_in, dict) else x_in
+                y, pull = jax.vjp(stage_fns[_s], p, x_val)
+                a_ref.value = y
+                v_ref.value = pull
+
+            tg.task(
+                SpPriority(prio("f", s, m)),
+                SpRead(p_cells[s]),
+                SpRead(src),
+                SpWrite(act[s][m]),
+                SpWrite(vjp[s][m]),
+                fwd,
+                name=f"F[{s},{m}]",
+                cost=5.0,
+            )
+
+        # ---- loss head + seed backward --------------------------------------
+        def head(ph, x, mb, d_ref, gh_ref, l_ref, _m=m):
+            loss, pull = jax.vjp(lambda p_, x_: head_fn(p_, x_, mb), ph, x)
+            gph, gx = pull(jnp.float32(1.0 / M))
+            d_ref.value = gx
+            gh_ref.value = jax.tree.map(
+                lambda a, g: a + g.astype(a.dtype), gh_ref.value, gph
+            )
+            l_ref.value = l_ref.value + loss / M
+
+        tg.task(
+            SpPriority(prio("b", S - 1, m) + 1),
+            SpRead(ph_cell),
+            SpRead(act[S - 1][m]),
+            SpRead(mb_cells[m]),
+            SpWrite(dact[S - 1][m]),
+            SpCommutativeWrite(gh_cell),
+            SpCommutativeWrite(loss_cell),
+            head,
+            name=f"L[{m}]",
+            cost=2.0,
+        )
+
+        # ---- backward tasks ---------------------------------------------------
+        for s in range(S - 1, -1, -1):
+
+            def bwd(pull, dy, g_ref, d_ref, _s=s):
+                gp, gx = pull(dy)
+                g_ref.value = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), g_ref.value, gp
+                )
+                if d_ref is not None:
+                    d_ref.value = gx
+
+            if s > 0:
+                tg.task(
+                    SpPriority(prio("b", s, m)),
+                    SpRead(vjp[s][m]),
+                    SpRead(dact[s][m]),
+                    SpCommutativeWrite(g_cells[s]),
+                    SpWrite(dact[s - 1][m]),
+                    lambda pull, dy, g_ref, d_ref, _s=s: bwd(pull, dy, g_ref, d_ref, _s),
+                    name=f"B[{s},{m}]",
+                    cost=8.0,
+                )
+            else:
+                tg.task(
+                    SpPriority(prio("b", s, m)),
+                    SpRead(vjp[0][m]),
+                    SpRead(dact[0][m]),
+                    SpCommutativeWrite(g_cells[0]),
+                    lambda pull, dy, g_ref, _s=0: bwd(pull, dy, g_ref, None, _s),
+                    name=f"B[0,{m}]",
+                    cost=8.0,
+                )
+
+    tg.wait_all_tasks()
+    return loss_cell.value, [g.value for g in g_cells], gh_cell.value, tg
+
+
+def split_stages(params_layers: Any, n_stages: int, n_layers: int):
+    """Slice a stacked layer-param tree into ``n_stages`` contiguous chunks."""
+    per = n_layers // n_stages
+    assert per * n_stages == n_layers
+    return [
+        jax.tree.map(lambda t: t[s * per : (s + 1) * per], params_layers)
+        for s in range(n_stages)
+    ]

@@ -1,0 +1,117 @@
+"""Serving steps: prefill and decode, jitted per (arch × shape) cell.
+
+``serve_step`` is what the decode_* dry-run cells lower: one new token per
+sequence against a sequence-sharded KV cache (flash-decoding-style combine
+over the model axis, DESIGN.md §5).  Sampling is greedy (argmax) — the
+serve-path compute is the model, not the sampler.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import current_mesh, named_sharding
+from repro.models import (
+    abstract_cache,
+    abstract_inputs,
+    abstract_params,
+    decode_step,
+    prefill,
+)
+from repro.models.config import ArchConfig, ShapeSpec
+from repro.models.param import ParamDef, sharding_tree
+from repro.models.transformer import cache_defs, param_shardings
+
+
+def cache_shardings(cfg: ArchConfig, batch: int, max_seq: int):
+    return sharding_tree(cache_defs(cfg, batch, max_seq))
+
+
+def _pad_kv(kv: jax.Array, prompt_len: int, size: int, window) -> jax.Array:
+    """Place prefill K/V (B, T0, KH, Dh) into a fresh cache of ``size`` slots.
+
+    Full cache: copy into [0:T0].  Ring cache (windowed): position p lives in
+    slot p % size; only the last ``size`` positions matter."""
+    B, T0 = kv.shape[:2]
+    out = jnp.zeros((B, size) + kv.shape[2:], kv.dtype)
+    if window is None:
+        return jax.lax.dynamic_update_slice_in_dim(out, kv, 0, axis=1)
+    keep = min(size, T0)
+    tail = kv[:, T0 - keep :]
+    slots = (jnp.arange(T0 - keep, T0)) % size
+    return out.at[:, slots].set(tail)
+
+
+def prime_cache(cfg: ArchConfig, prefill_caches, prompt_len: int, max_seq: int):
+    """Convert ``prefill(...)``'s per-layer caches (seq dim = prompt length)
+    into decode-ready caches of capacity ``max_seq`` (ring-aware)."""
+
+    def prime_kind(cache: dict, hcfg: ArchConfig) -> dict:
+        if "k" in cache:  # attention
+            W = hcfg.attn_window
+            size = min(max_seq, W) if W is not None else max_seq
+            return {
+                "k": _pad_kv(cache["k"], prompt_len, size, W),
+                "v": _pad_kv(cache["v"], prompt_len, size, W),
+            }
+        if "c_kv" in cache:  # MLA latents (B, T0, r)
+            return {
+                k: _pad_kv(v[:, :, None, :], prompt_len, max_seq, None)[:, :, 0, :]
+                for k, v in cache.items()
+            }
+        return cache  # ssm / rglru states are already decode-ready
+
+    from repro.models.transformer import _hybrid_window_cfg, hybrid_layout
+
+    if cfg.family == "hybrid":
+        hcfg = _hybrid_window_cfg(cfg)
+        pat = cfg.hybrid.pattern
+        out_scan = {}
+        for key_, sub in prefill_caches["scan"].items():
+            # scanned caches carry a leading super-block dim; vmap the priming
+            out_scan[key_] = jax.vmap(lambda c: prime_kind(c, hcfg))(sub)
+        out_tail = [prime_kind(c, hcfg) for c in prefill_caches["tail"]]
+        return {"scan": out_scan, "tail": out_tail}
+    kind_cfg = cfg
+    # scanned stack: leading layer dim
+    return jax.vmap(lambda c: prime_kind(c, kind_cfg))(prefill_caches)
+
+
+def build_prefill_fn(cfg: ArchConfig, *, jit: bool = True):
+    def prefill_fn(params, batch):
+        logits, caches = prefill(params, batch, cfg)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return jax.jit(prefill_fn) if jit else prefill_fn
+
+
+def build_decode_fn(cfg: ArchConfig, *, jit: bool = True):
+    def decode_fn(params, tokens, caches, pos):
+        logits, new_caches = decode_step(params, tokens, caches, pos, cfg)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_caches
+
+    return jax.jit(decode_fn, donate_argnums=(2,)) if jit else decode_fn
+
+
+def build_serve_step(cfg: ArchConfig, shape: ShapeSpec, *, jit: bool = True):
+    """The dry-run serve_step for decode shapes: (params, tokens (B,1),
+    caches, pos) → (next tokens, caches).  With jit+mesh, shardings attach."""
+    decode_fn = build_decode_fn(cfg, jit=False)
+    if not jit:
+        return decode_fn
+    if current_mesh() is None:
+        return jax.jit(decode_fn, donate_argnums=(2,))
+    p_sh = param_shardings(cfg)
+    c_sh = cache_shardings(cfg, shape.global_batch, shape.seq_len)
+    tok_sh = named_sharding((shape.global_batch, 1), ("batch", None))
+    pos_sh = named_sharding((), ())
+    return jax.jit(
+        decode_fn,
+        in_shardings=(p_sh, tok_sh, c_sh, pos_sh),
+        out_shardings=(tok_sh, c_sh),
+        donate_argnums=(2,),
+    )

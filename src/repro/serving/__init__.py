@@ -1,0 +1,4 @@
+from .kvcache import KVPagePool, PageError
+from .engine import ServeEngine, Request
+
+__all__ = ["KVPagePool", "PageError", "ServeEngine", "Request"]

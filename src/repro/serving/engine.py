@@ -1,0 +1,168 @@
+"""Continuous-batching serve engine driven by the Specx eager runtime.
+
+Requests are admitted into a fixed decode batch of ``n_slots`` sequences
+(the KV pool's capacity).  Each engine iteration is expressed as STF tasks:
+
+    admit      SpWrite(batch_state)  — prefill newly admitted requests into
+                                        their slots (host task calling the
+                                        jitted prefill; C3 data movement)
+    decode     SpWrite(batch_state)  — one fused decode step for the whole
+                                        batch (jitted serve step)
+    collect    SpRead(batch_state)   — emit finished sequences, free slots
+
+The KV cache lives as one batched pytree (slot-major); admission writes a
+slot via masked updates.  LRU eviction (kvcache.py) frees slots of finished
+sequences when the pool saturates — Specx's device-memory policy at the
+level TPUs actually manage (DESIGN.md §2 C3).
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    SpComputeEngine,
+    SpData,
+    SpRead,
+    SpTaskGraph,
+    SpWorkerTeamBuilder,
+    SpWrite,
+)
+from repro.models import decode_step, init_cache, prefill
+from repro.models.config import ArchConfig
+from repro.runtime.serve import prime_cache
+from repro.serving.kvcache import KVPagePool
+
+_req_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray  # (L,) int32
+    max_new_tokens: int = 16
+    req_id: int = field(default_factory=lambda: next(_req_ids))
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Batched greedy-decoding server over a fixed slot pool."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        *,
+        n_slots: int = 4,
+        max_seq: int = 128,
+        engine: Optional[SpComputeEngine] = None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.pool = KVPagePool(n_slots)
+        self._queue: collections.deque[Request] = collections.deque()
+        self._slot_req: dict[int, Request] = {}
+        self._pos = np.zeros(n_slots, np.int32)
+        self._caches = init_cache(cfg, n_slots, max_seq)
+        self._last_tok = jnp.zeros((n_slots, 1), jnp.int32)
+        self._own_engine = engine is None
+        self.engine = engine or SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(2))
+        self.steps = 0
+
+        self._decode = jax.jit(
+            lambda p, t, c, pos: decode_step(p, t, c, pos, cfg), donate_argnums=(2,)
+        )
+        self._prefill = jax.jit(lambda p, b: prefill(p, b, cfg))
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
+        req = Request(np.asarray(prompt, np.int32), max_new_tokens)
+        self._queue.append(req)
+        return req
+
+    def run_until_drained(self, max_iters: int = 1000) -> None:
+        it = 0
+        while (self._queue or self._slot_req) and it < max_iters:
+            self.step()
+            it += 1
+        if self._queue or self._slot_req:
+            raise RuntimeError("serve loop did not drain")
+
+    # ----------------------------------------------------------------- inner
+
+    def _admit_one(self, req: Request) -> None:
+        slot = self.pool.acquire(req.req_id)
+        self._slot_req[slot] = req
+        prompt = req.prompt[None, :]  # (1, L)
+        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(prompt)})
+        primed = prime_cache(self.cfg, caches, prompt.shape[1], self.max_seq)
+        # write slot: every cache leaf is slot-major on axis (layers, slot, ...)
+        def write_slot(full, one):
+            return full.at[:, slot].set(one[:, 0].astype(full.dtype))
+
+        self._caches = jax.tree.map(write_slot, self._caches, primed)
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.out_tokens.append(tok)
+        self._last_tok = self._last_tok.at[slot, 0].set(tok)
+        self._pos[slot] = prompt.shape[1]
+
+    def step(self) -> None:
+        """One serve iteration as an STF task graph."""
+        tg = SpTaskGraph().compute_on(self.engine)
+        state_cell = SpData(
+            {"caches": self._caches, "tok": self._last_tok}, "serve_state"
+        )
+
+        def admit(ref):
+            while self._queue and self.pool.n_active < self.n_slots:
+                try:
+                    self._admit_one(self._queue.popleft())
+                except Exception:
+                    raise
+            ref.value = {"caches": self._caches, "tok": self._last_tok}
+
+        tg.task(SpWrite(state_cell), admit, name="admit")
+
+        def decode(ref):
+            if not self._slot_req:
+                return
+            st = ref.value
+            logits, new_caches = self._decode(
+                self.params, st["tok"], st["caches"], jnp.asarray(self._pos)
+            )
+            toks = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+            ref.value = {"caches": new_caches, "tok": toks}
+
+        tg.task(SpWrite(state_cell), decode, name="decode", cost=10.0)
+
+        def collect(st):
+            if not self._slot_req:
+                return
+            self._caches = st["caches"]
+            self._last_tok = st["tok"]
+            toks = np.asarray(st["tok"][:, 0])
+            for slot, req in list(self._slot_req.items()):
+                req.out_tokens.append(int(toks[slot]))
+                self._pos[slot] += 1
+                self.pool.touch(req.req_id)
+                if len(req.out_tokens) >= req.max_new_tokens:
+                    req.done = True
+                    self.pool.release(req.req_id, keep_resident=True)
+                    del self._slot_req[slot]
+
+        tg.task(SpRead(state_cell), collect, name="collect")
+        tg.wait_all_tasks()
+        self.steps += 1
+
+    def close(self) -> None:
+        if self._own_engine:
+            self.engine.stop()

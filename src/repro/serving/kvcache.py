@@ -1,0 +1,110 @@
+"""KV-cache slot pool with LRU eviction — the TPU-idiomatic home of Specx's
+device-memory LRU policy (paper §4.3: "we employ the Least Recently Used
+policy to determine which memory blocks should be evicted from the devices
+when they are full").
+
+On TPU, XLA owns HBM for tensors, so the *software-managed* memory level is
+the serving KV cache: a fixed budget of cache slots (each one sequence's
+decode state).  The pool tracks residency, evicts least-recently-used
+*inactive* sequences when full, and remembers evicted prefixes so a
+returning request is re-prefilled (the "copy back to host" analogue —
+recomputation instead of transfer, the TPU-appropriate trade).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+
+class PageError(RuntimeError):
+    pass
+
+
+@dataclass
+class SlotInfo:
+    seq_id: int
+    last_used: float
+    active: bool = True  # actively decoding (not evictable)
+    tokens_cached: int = 0
+
+
+class KVPagePool:
+    """Fixed-capacity slot pool with LRU eviction of inactive sequences."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self._slots: dict[int, Optional[SlotInfo]] = {i: None for i in range(n_slots)}
+        self._by_seq: dict[int, int] = {}
+        self.evictions = 0
+
+    # ------------------------------------------------------------------ alloc
+
+    def acquire(self, seq_id: int, tokens_cached: int = 0) -> int:
+        """Return a slot index for ``seq_id``, evicting LRU if needed."""
+        if seq_id in self._by_seq:
+            slot = self._by_seq[seq_id]
+            info = self._slots[slot]
+            info.last_used = time.monotonic()
+            info.active = True
+            return slot
+        slot = self._free_slot()
+        if slot is None:
+            slot = self._evict_lru()
+        self._slots[slot] = SlotInfo(seq_id, time.monotonic(), True, tokens_cached)
+        self._by_seq[seq_id] = slot
+        return slot
+
+    def _free_slot(self) -> Optional[int]:
+        for i, info in self._slots.items():
+            if info is None:
+                return i
+        return None
+
+    def _evict_lru(self) -> int:
+        candidates = [
+            (info.last_used, slot)
+            for slot, info in self._slots.items()
+            if info is not None and not info.active
+        ]
+        if not candidates:
+            raise PageError(
+                f"all {self.n_slots} KV slots active; cannot admit a new sequence"
+            )
+        _, slot = min(candidates)
+        victim = self._slots[slot]
+        del self._by_seq[victim.seq_id]
+        self._slots[slot] = None
+        self.evictions += 1
+        return slot
+
+    # ----------------------------------------------------------------- status
+
+    def touch(self, seq_id: int) -> None:
+        info = self._slots[self._by_seq[seq_id]]
+        info.last_used = time.monotonic()
+
+    def release(self, seq_id: int, *, keep_resident: bool = True) -> None:
+        """Finish decoding; optionally keep the prefix resident (evictable)."""
+        slot = self._by_seq.get(seq_id)
+        if slot is None:
+            return
+        if keep_resident:
+            self._slots[slot].active = False
+        else:
+            del self._by_seq[seq_id]
+            self._slots[slot] = None
+
+    def resident(self, seq_id: int) -> bool:
+        return seq_id in self._by_seq
+
+    def slot_of(self, seq_id: int) -> int:
+        return self._by_seq[seq_id]
+
+    @property
+    def n_free(self) -> int:
+        return sum(1 for v in self._slots.values() if v is None)
+
+    @property
+    def n_active(self) -> int:
+        return sum(1 for v in self._slots.values() if v is not None and v.active)

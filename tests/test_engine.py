@@ -1,0 +1,85 @@
+"""Compute engines, worker teams, dynamic moves, straggler duplication."""
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.core import (
+    SpComputeEngine,
+    SpData,
+    SpRead,
+    SpTaskGraph,
+    SpWorkerTeamBuilder,
+    SpWrite,
+)
+from repro.dist.fault import CancelToken, run_duplicated
+
+
+def test_team_builders():
+    t = SpWorkerTeamBuilder.team_of_cpu_workers(3)
+    assert len(t) == 3
+    t2 = SpWorkerTeamBuilder.team_of_cpu_cuda_workers(2, 1)
+    assert t2.kinds.count("ref") == 2 and t2.kinds.count("pallas") == 1
+
+
+def test_move_workers_between_engines():
+    a = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(4), name="a")
+    b = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(1), name="b")
+    try:
+        moved = a.send_workers_to(b, 2)
+        assert moved == 2
+        deadline = time.time() + 2.0
+        while time.time() < deadline and (a.n_workers, b.n_workers) != (2, 3):
+            time.sleep(0.01)
+        assert (a.n_workers, b.n_workers) == (2, 3)
+        # engine b still executes fine after the move
+        tg = SpTaskGraph().compute_on(b)
+        x = SpData(5, "x")
+        assert tg.task(SpRead(x), lambda v: v + 1).get_value() == 6
+    finally:
+        a.stop()
+        b.stop()
+
+
+def test_multiple_graphs_one_engine():
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(2))
+    try:
+        tgs = [SpTaskGraph().compute_on(eng) for _ in range(3)]
+        outs = []
+        for i, tg in enumerate(tgs):
+            x = SpData(i, f"x{i}")
+            outs.append(tg.task(SpRead(x), lambda v: v * 2))
+        assert [o.get_value() for o in outs] == [0, 2, 4]
+    finally:
+        eng.stop()
+
+
+def test_straggler_duplicates_first_wins():
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(4))
+    try:
+        tg = SpTaskGraph().compute_on(eng)
+        x = SpData(21, "x")
+        out = SpData(None, "out")
+        view = run_duplicated(tg, lambda v: v * 2, [x], out, n=3, name="dup")
+        tg.wait_all_tasks()
+        assert out.value == 42
+        assert view.get_value() == 42
+        # at least one copy should have been cancelled or all finished with
+        # identical results — either way the select picked a winner
+        states = [t.state for t in tg.tasks if t.name.startswith("dup.copy")]
+        assert all(s in ("finished", "cancelled") for s in states)
+    finally:
+        eng.stop()
+
+
+def test_cancel_token_single_winner():
+    tok = CancelToken()
+
+    class T:  # minimal stand-in
+        pass
+
+    a, b = T(), T()
+    tok.set(a)
+    tok.set(b)
+    assert tok.winner is a

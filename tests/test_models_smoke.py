@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED config
+of each family runs one forward/train step on CPU; output shapes + no NaNs.
+Plus prefill→decode consistency against the full forward."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, reduced_config
+from repro.models import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.runtime.serve import prime_cache
+
+B, L = 2, 32
+
+
+def _batch(cfg, rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    if cfg.frontend == "audio":
+        return {
+            "embeds": jax.random.normal(k1, (B, L, 512), jnp.bfloat16),
+            "mask": jnp.zeros((B, L), bool).at[:, ::4].set(True),
+            "labels": jax.random.randint(k2, (B, L), 0, cfg.vocab),
+        }
+    if cfg.frontend == "vision":
+        lt = L - cfg.n_patches
+        return {
+            "tokens": jax.random.randint(k1, (B, lt), 0, cfg.vocab),
+            "patch_embeds": jax.random.normal(k3, (B, cfg.n_patches, 1024), jnp.bfloat16),
+            "labels": jax.random.randint(k2, (B, lt), 0, cfg.vocab),
+        }
+    return {
+        "tokens": jax.random.randint(k1, (B, L), 0, cfg.vocab),
+        "labels": jax.random.randint(k2, (B, L), 0, cfg.vocab),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced_config(arch)
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    x, _, aux = jax.jit(lambda p, b: forward(p, b, cfg))(params, batch)
+    exp_len = L
+    assert x.shape == (B, exp_len, cfg.d_model)
+    assert bool(jnp.isfinite(x.astype(jnp.float32)).all()), "NaN/Inf in hidden states"
+
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(lambda p, b: loss_fn(p, b, cfg), has_aux=True)
+    )(params, batch)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(
+        float(jnp.sum(jnp.square(g.astype(jnp.float32)))) for g in jax.tree.leaves(grads)
+    )
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ARCH_NAMES if reduced_config(a).supports_decode]
+)
+def test_prefill_decode_matches_forward(arch):
+    """Teacher-forced decode after prefill must reproduce the full-sequence
+    forward logits position by position (fp32 for tight tolerance)."""
+    cfg = reduced_config(arch).replace(dtype="float32")
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    T0, STEPS, SMAX = 16, 4, 32
+
+    full_batch = _batch(cfg, jax.random.PRNGKey(1))
+    if cfg.frontend == "vision":
+        tokens = full_batch["tokens"]
+    else:
+        tokens = full_batch["tokens"]
+
+    # full forward over T0+STEPS tokens → logits at each position
+    fb = dict(full_batch)
+    fb["tokens"] = tokens[:, : T0 + STEPS]
+    x, _, _ = forward(params, fb, cfg)
+    from repro.models.layers import logits_apply
+
+    logits_full = logits_apply(params, x, cfg).astype(jnp.float32)
+
+    # prefill on T0, then teacher-forced decode
+    pb = dict(full_batch)
+    pb["tokens"] = tokens[:, :T0]
+    logits_p, caches = prefill(params, pb, cfg)
+    offset = cfg.n_patches if cfg.frontend == "vision" else 0
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, 0].astype(jnp.float32)),
+        np.asarray(logits_full[:, offset + T0 - 1]),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+    caches = prime_cache(cfg, caches, offset + T0, offset + SMAX)
+    for s in range(STEPS - 1):
+        pos = offset + T0 + s
+        tok = tokens[:, T0 + s : T0 + s + 1]
+        logits_d, caches = decode_step(params, tok, caches, jnp.int32(pos), cfg)
+        np.testing.assert_allclose(
+            np.asarray(logits_d[:, 0].astype(jnp.float32)),
+            np.asarray(logits_full[:, pos]),
+            rtol=2e-4,
+            atol=2e-4,
+            err_msg=f"{arch} step {s}",
+        )

@@ -1,0 +1,127 @@
+"""Schedulers (paper §4.5) + staged linearization — incl. the property that
+every policy emits a valid topological order of random STF streams."""
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AccessMode,
+    CriticalPathScheduler,
+    FifoScheduler,
+    LifoScheduler,
+    PriorityScheduler,
+    SpCommutativeWrite,
+    SpData,
+    SpPriority,
+    SpRead,
+    SpTaskGraph,
+    SpWrite,
+    WorkStealingScheduler,
+    compute_upward_ranks,
+    execute_staged,
+    linearize,
+    make_scheduler,
+    schedule_summary,
+)
+from repro.core.task import Task
+from repro.core.access import SpAccess
+
+
+def _mk_task(name, prio=0, cost=1.0):
+    x = SpData(0, name + ".x")
+    acc = SpAccess(x, AccessMode.READ)
+    t = Task({"ref": lambda v: None}, [acc], [("single", acc)], priority=prio, name=name, cost=cost)
+    t.state = "ready"
+    return t
+
+
+def test_fifo_lifo_priority_order():
+    f, l, p = FifoScheduler(), LifoScheduler(), PriorityScheduler()
+    tasks = [_mk_task(f"t{i}", prio=i) for i in range(3)]
+    for s in (f, l, p):
+        for t in tasks:
+            s.push(t)
+    assert [f.pop().name for _ in range(3)] == ["t0", "t1", "t2"]
+    assert [l.pop().name for _ in range(3)] == ["t2", "t1", "t0"]
+    assert [p.pop().name for _ in range(3)] == ["t2", "t1", "t0"]
+    assert f.pop() is None
+
+
+def test_work_stealing():
+    ws = WorkStealingScheduler()
+    for i in range(4):
+        ws.push(_mk_task(f"t{i}"))
+    got = []
+    for _ in range(4):
+        t = ws.pop(worker_name="w0")
+        assert t is not None
+        got.append(t.name)
+    assert sorted(got) == ["t0", "t1", "t2", "t3"]
+
+
+def test_make_scheduler_registry():
+    for name in ("fifo", "lifo", "priority", "critical_path", "work_stealing"):
+        assert make_scheduler(name) is not None
+    with pytest.raises(ValueError):
+        make_scheduler("nope")
+
+
+def _random_graph(seed_modes):
+    tg = SpTaskGraph()
+    cells = [SpData(0, f"c{i}") for i in range(3)]
+    for i, (ci, mode_w) in enumerate(seed_modes):
+        acc = SpWrite(cells[ci]) if mode_w else SpRead(cells[ci])
+        tg.task(acc, lambda *_: None, name=f"t{i}", priority=i % 3)
+    return tg
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed_modes=st.lists(
+        st.tuples(st.integers(0, 2), st.booleans()), min_size=1, max_size=12
+    ),
+    policy=st.sampled_from(["fifo", "priority", "critical_path", "overlap"]),
+)
+def test_property_linearize_is_topological(seed_modes, policy):
+    tg = _random_graph(seed_modes)
+    order = linearize(tg, policy)
+    assert len(order) == len(tg.tasks)
+    pos = {t.uid: i for i, t in enumerate(order)}
+    for src, dst in tg.edges():
+        assert pos[src.uid] < pos[dst.uid], f"{src.name} !< {dst.name} under {policy}"
+
+
+def test_overlap_hoists_comm():
+    tg = SpTaskGraph()
+    xs = [SpData(0, f"x{i}") for i in range(3)]
+    for i in range(3):
+        tg.task(SpWrite(xs[i]), lambda r: None, name=f"compute{i}")
+    tg.task(SpRead(xs[0]), lambda v: None, name="allreduce", comm=True)
+    fifo = [t.name for t in linearize(tg, "fifo")]
+    ovl = [t.name for t in linearize(tg, "overlap")]
+    assert ovl.index("allreduce") < fifo.index("allreduce")
+    s = schedule_summary(linearize(tg, "overlap"))
+    assert s["n_comm"] == 1
+
+
+def test_critical_path_ranks():
+    tg = SpTaskGraph()
+    a, b = SpData(0, "a"), SpData(0, "b")
+    t1 = tg.task(SpWrite(a), lambda r: None, name="head", cost=1.0)
+    tg.task(SpRead(a), lambda v: None, name="long", cost=10.0)
+    tg.task(SpWrite(b), lambda r: None, name="solo", cost=1.0)
+    compute_upward_ranks(tg.tasks, tg.successor_map())
+    ranks = {t.name: t._rank for t in tg.tasks}
+    assert ranks["head"] > ranks["solo"]  # head unlocks the expensive task
+
+
+def test_execute_staged_respects_values():
+    tg = SpTaskGraph()
+    x = SpData(2.0, "x")
+    y = SpData(0.0, "y")
+    tg.task(SpRead(x), SpWrite(y), lambda v, r: setattr(r, "value", v + 1))
+    tg.task(SpWrite(y), lambda r: setattr(r, "value", r.value * 10))
+    order = execute_staged(tg, "fifo")
+    assert y.value == 30.0
+    assert len(order) == 2

@@ -1,0 +1,172 @@
+"""Speculative execution (paper §4.6): commit, rollback, chains, stats,
+and the property that speculation never changes observable results."""
+from __future__ import annotations
+
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SpComputeEngine,
+    SpData,
+    SpMaybeWrite,
+    SpRead,
+    SpSpeculativeModel,
+    SpTaskGraph,
+    SpWorkerTeamBuilder,
+    SpWrite,
+)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(4))
+    yield eng
+    eng.stop()
+
+
+def _run_chain(engine, writes: list[bool], spec: bool):
+    """maybe-write(x) → read(x)+write(y) pairs; returns (x, y, stats)."""
+    model = SpSpeculativeModel.SP_MODEL_1 if spec else SpSpeculativeModel.SP_NO_SPEC
+    tg = SpTaskGraph(model).compute_on(engine)
+    x = SpData(1.0, "x")
+    y = SpData(0.0, "y")
+    for i, do_write in enumerate(writes):
+        def update(ref, _w=do_write, _i=i):
+            if _w:
+                ref.value = ref.value + 10.0
+
+        def consume(xv, yref):
+            yref.value = yref.value + xv
+
+        tg.task(SpMaybeWrite(x), update, name=f"u{i}")
+        tg.task(SpRead(x), SpWrite(y), consume, name=f"r{i}")
+    tg.wait_all_tasks()
+    return x.value, y.value, dict(tg.spec_stats)
+
+
+def test_commit_path(engine):
+    x, y, stats = _run_chain(engine, [False], spec=True)
+    assert (x, y) == (1.0, 1.0)
+    assert stats["commits"] == 1 and stats["rollbacks"] == 0
+
+
+def test_rollback_path(engine):
+    x, y, stats = _run_chain(engine, [True], spec=True)
+    assert (x, y) == (11.0, 11.0)
+    assert stats["rollbacks"] == 1 and stats["commits"] == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(writes=st.lists(st.booleans(), min_size=1, max_size=6))
+def test_property_spec_equals_nospec(writes):
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(4))
+    try:
+        base = _run_chain(eng, writes, spec=False)[:2]
+        spec = _run_chain(eng, writes, spec=True)[:2]
+        assert base == spec
+    finally:
+        eng.stop()
+
+
+def test_speculation_overlaps_wallclock(engine):
+    def timed(spec):
+        model = SpSpeculativeModel.SP_MODEL_1 if spec else SpSpeculativeModel.SP_NO_SPEC
+        tg = SpTaskGraph(model).compute_on(engine)
+        x = SpData(1.0, "x")
+        y = SpData(0.0, "y")
+        t0 = time.perf_counter()
+        tg.task(SpMaybeWrite(x), lambda r: time.sleep(0.05), name="U")
+        tg.task(SpRead(x), SpWrite(y), lambda v, r: (time.sleep(0.05), setattr(r, "value", v))[-1], name="R")
+        tg.wait_all_tasks()
+        return time.perf_counter() - t0
+
+    assert timed(True) < timed(False) * 0.8
+
+
+def test_certain_write_clears_uncertainty(engine):
+    tg = SpTaskGraph(SpSpeculativeModel.SP_MODEL_1).compute_on(engine)
+    x = SpData(1.0, "x")
+    y = SpData(0.0, "y")
+    tg.task(SpMaybeWrite(x), lambda r: setattr(r, "value", 5.0), name="maybe")
+    tg.task(SpWrite(x), lambda r: setattr(r, "value", 100.0), name="certain")
+    tg.task(SpRead(x), SpWrite(y), lambda v, r: setattr(r, "value", v), name="read")
+    tg.wait_all_tasks()
+    assert y.value == 100.0
+    assert tg.spec_stats["speculated"] == 0  # reader after certain write
+
+
+def test_multiple_readers_share_snapshot(engine):
+    tg = SpTaskGraph(SpSpeculativeModel.SP_MODEL_1).compute_on(engine)
+    x = SpData(2.0, "x")
+    outs = [SpData(0.0, f"o{i}") for i in range(3)]
+    tg.task(SpMaybeWrite(x), lambda r: None, name="U")  # never writes
+    for i in range(3):
+        tg.task(SpRead(x), SpWrite(outs[i]), lambda v, r: setattr(r, "value", v * (1)), name=f"r{i}")
+    tg.wait_all_tasks()
+    assert [o.value for o in outs] == [2.0, 2.0, 2.0]
+    assert tg.spec_stats["commits"] == 3
+
+
+def test_comm_refuses_speculative_graph(engine):
+    from repro.core import SpCommGroup, mpi_send
+
+    tg = SpTaskGraph(SpSpeculativeModel.SP_MODEL_1)
+    g = SpCommGroup(0, 2)
+    x = SpData(1.0, "x")
+    with pytest.raises(ValueError, match="incompatible"):
+        mpi_send(tg, g, x, dest=1, tag=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(writes=st.lists(st.booleans(), min_size=2, max_size=5))
+def test_property_model2_equals_nospec(writes):
+    """SP_MODEL_2 (writer chains, paper's second model) is also result-exact."""
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(4))
+    try:
+        base = _run_chain(eng, writes, spec=False)[:2]
+        tg_model2 = SpSpeculativeModel.SP_MODEL_2
+        # inline chain with interleaved reader at the end of each prefix
+        def run(model):
+            tg = SpTaskGraph(model).compute_on(eng)
+            x = SpData(1.0, "x")
+            y = SpData(0.0, "y")
+            for i, do_write in enumerate(writes):
+                def update(ref, _w=do_write):
+                    if _w:
+                        ref.value = ref.value + 10.0
+                tg.task(SpMaybeWrite(x), update, name=f"u{i}")
+            tg.task(SpRead(x), SpWrite(y),
+                    lambda xv, yref: setattr(yref, "value", xv * 2), name="r")
+            tg.wait_all_tasks()
+            return x.value, y.value
+        assert run(SpSpeculativeModel.SP_NO_SPEC) == run(tg_model2)
+    finally:
+        eng.stop()
+
+
+def test_model2_overlaps_whole_chain(engine):
+    """With an all-reject chain, MODEL_2's reader overlaps every writer:
+    wall ≈ max(ΣU, R); MODEL_1 waits for all but the last writer."""
+    import time as _t
+
+    def run(model, d_u=0.03, d_r=0.12):
+        tg = SpTaskGraph(model).compute_on(engine)
+        x = SpData(1.0, "x")
+        y = SpData(0.0, "y")
+        t0 = _t.perf_counter()
+        for i in range(2):
+            tg.task(SpMaybeWrite(x), lambda ref: _t.sleep(d_u), name=f"u{i}")
+        tg.task(
+            SpRead(x), SpWrite(y),
+            lambda xv, yref: (_t.sleep(d_r), setattr(yref, "value", xv))[-1],
+            name="r",
+        )
+        tg.wait_all_tasks()
+        return _t.perf_counter() - t0
+
+    t_none = run(SpSpeculativeModel.SP_NO_SPEC)
+    t_m1 = run(SpSpeculativeModel.SP_MODEL_1)
+    t_m2 = run(SpSpeculativeModel.SP_MODEL_2)
+    assert t_m2 < t_m1 < t_none, (t_none, t_m1, t_m2)

@@ -1,0 +1,97 @@
+"""The staged train step (runtime/train.py): learning, microbatch
+equivalence, schedule structure, nonfinite rollback (C6), compression."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.data import SyntheticLMDataset
+from repro.models.config import ShapeSpec
+from repro.runtime.train import build_train_step, init_train_state
+
+CFG = reduced_config("deepseek-7b")
+SHAPE = ShapeSpec("t", "train", 32, 8)
+
+
+def _batch(step=0):
+    ds = SyntheticLMDataset(CFG, SHAPE, seed=0)
+    return {k: jnp.asarray(v) for k, v in ds.batch_for_step(step).items()}
+
+
+def test_loss_decreases():
+    state = init_train_state(jax.random.PRNGKey(0), CFG)
+    art = build_train_step(CFG, n_microbatches=2, lr_schedule=lambda s: jnp.float32(1e-3))
+    ds = SyntheticLMDataset(CFG, SHAPE, seed=0)
+    losses = []
+    for step in range(30):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_for_step(step).items()}
+        state, m = art(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5
+    assert int(state.step) == 30
+
+
+def test_schedule_structure():
+    art = build_train_step(CFG, n_microbatches=4, schedule_policy="overlap", jit=False)
+    state = init_train_state(jax.random.PRNGKey(0), CFG)
+    art(state, _batch())
+    names = art.schedule_names
+    assert sum(n.startswith("mb") for n in names) == 4
+    assert "grad_allreduce" in names and "optimizer" in names
+    assert names.index("grad_allreduce") < names.index("optimizer")
+
+
+def test_microbatch_equivalence():
+    state = init_train_state(jax.random.PRNGKey(1), CFG)
+    batch = _batch()
+    a1 = build_train_step(CFG, n_microbatches=1, donate=False)
+    a2 = build_train_step(CFG, n_microbatches=2, donate=False)
+    s1, m1 = a1(state, batch)
+    s2, m2 = a2(state, batch)
+    # same data, same params → same accumulated grads up to fp error
+    np.testing.assert_allclose(
+        float(m1["grad_norm"]), float(m2["grad_norm"]), rtol=2e-2
+    )
+    w1 = jax.tree.leaves(s1.params)[0].astype(jnp.float32)
+    w2 = jax.tree.leaves(s2.params)[0].astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=2e-2)
+
+
+def test_nonfinite_rollback():
+    """Branchless C6 speculation: a NaN batch must leave params unchanged."""
+    state = init_train_state(jax.random.PRNGKey(2), CFG)
+    art = build_train_step(CFG, n_microbatches=1, donate=False)
+    batch = _batch()
+    bad = dict(batch)
+    # poison the loss through labels is hard (int); instead poison params'
+    # gradient via an inf in the embed input path: use an out-of-range label
+    # clamped... simplest: drive a NaN through a float param
+    params = state.params
+    poisoned = jax.tree_util.tree_map(lambda x: x, params)
+    poisoned["layers"]["ln1"] = poisoned["layers"]["ln1"].at[0, 0].set(jnp.nan)
+    bad_state = state._replace(params=poisoned)
+    new_state, m = art(bad_state, batch)
+    assert not bool(jnp.isfinite(m["grad_norm"]))
+    # rollback: params (including the NaN cell) unchanged by the optimizer
+    before = poisoned["layers"]["mlp"]["wo"].astype(jnp.float32)
+    after = new_state.params["layers"]["mlp"]["wo"].astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(before), np.asarray(after))
+    assert int(new_state.step) == 1  # step still advances
+
+
+def test_grad_compression_path_runs():
+    state = init_train_state(jax.random.PRNGKey(3), CFG)
+    art = build_train_step(CFG, n_microbatches=1, grad_compression=True, donate=False)
+    state, m = art(state, _batch())
+    assert bool(jnp.isfinite(m["loss"]))
+
+
+def test_donation_buffer_reuse():
+    state = init_train_state(jax.random.PRNGKey(4), CFG)
+    art = build_train_step(CFG, n_microbatches=1, donate=True)
+    s2, _ = art(state, _batch())
+    with pytest.raises(RuntimeError):
+        _ = jax.tree.leaves(state.params)[0] + 0  # donated buffer is dead
