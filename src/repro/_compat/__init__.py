@@ -1,0 +1,5 @@
+"""Compatibility shims for optional third-party dependencies.
+
+Nothing here is imported by library code; ``tests/conftest.py`` installs the
+shims into ``sys.modules`` only when the real package is absent.
+"""

@@ -1,0 +1,177 @@
+"""A minimal, dependency-free stand-in for the ``hypothesis`` API surface
+our tests use (``given``, ``settings``, ``strategies``).
+
+The real hypothesis (declared in ``pyproject.toml``'s test extra) is
+preferred whenever it is importable; ``tests/conftest.py`` only registers
+this stub when it is not.  The stub does deterministic random sampling —
+same seeds every run — with a bias toward boundary values.  No shrinking:
+a falsifying example is re-raised with the drawn arguments attached.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+from types import ModuleType
+from typing import Any, Callable, Optional, Sequence
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int = 0, max_value: int = 100) -> SearchStrategy:
+    def draw(rng):
+        r = rng.random()
+        if r < 0.1:
+            return min_value
+        if r < 0.2:
+            return max_value
+        return rng.randint(min_value, max_value)
+
+    return SearchStrategy(draw)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def floats(
+    min_value: Optional[float] = None,
+    max_value: Optional[float] = None,
+    allow_nan: bool = True,
+    allow_infinity: Optional[bool] = None,
+    width: int = 64,
+) -> SearchStrategy:
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+
+    def draw(rng):
+        r = rng.random()
+        if r < 0.08:
+            return lo
+        if r < 0.16:
+            return hi
+        if r < 0.24 and lo <= 0.0 <= hi:
+            return 0.0
+        return rng.uniform(lo, hi)
+
+    return SearchStrategy(draw)
+
+
+def lists(
+    elements: SearchStrategy,
+    min_size: int = 0,
+    max_size: Optional[int] = None,
+    unique_by: Optional[Callable[[Any], Any]] = None,
+    unique: bool = False,
+) -> SearchStrategy:
+    if unique and unique_by is None:
+        unique_by = lambda x: x
+
+    def draw(rng):
+        hi = max_size if max_size is not None else min_size + 10
+        n = rng.randint(min_size, hi)
+        out, seen = [], set()
+        attempts = 0
+        while len(out) < n and attempts < n * 20:
+            attempts += 1
+            item = elements.example(rng)
+            if unique_by is not None:
+                key = unique_by(item)
+                if key in seen:
+                    continue
+                seen.add(key)
+            out.append(item)
+        return out
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def sampled_from(elements: Sequence) -> SearchStrategy:
+    pool = list(elements)
+    return SearchStrategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def one_of(*strategies: SearchStrategy) -> SearchStrategy:
+    pool = list(strategies)
+    return SearchStrategy(lambda rng: pool[rng.randrange(len(pool))].example(rng))
+
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def given(*g_args: SearchStrategy, **g_kwargs: SearchStrategy):
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        pos_names = [
+            p.name
+            for p in sig.parameters.values()
+            if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+        ]
+        # positional strategies bind to the RIGHTMOST positional params
+        # (hypothesis semantics); anything left is a pytest fixture
+        target_names = pos_names[len(pos_names) - len(g_args):] if g_args else []
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(0x5BE0 + 7919 * i)
+                drawn = {name: s.example(rng) for name, s in zip(target_names, g_args)}
+                drawn.update({k: s.example(rng) for k, s in g_kwargs.items()})
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    e.args = e.args + (
+                        f"[hypothesis-stub falsifying example #{i}: {drawn!r}]",
+                    )
+                    raise
+
+        # hide strategy-bound params from pytest's fixture resolution
+        bound = set(target_names) | set(g_kwargs)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for p in sig.parameters.values() if p.name not in bound]
+        )
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def _as_modules() -> tuple[ModuleType, ModuleType]:
+    """Build (hypothesis, hypothesis.strategies) module objects for
+    ``sys.modules`` registration."""
+    st = ModuleType("hypothesis.strategies")
+    for name in (
+        "SearchStrategy", "integers", "booleans", "floats", "lists",
+        "tuples", "sampled_from", "just", "one_of",
+    ):
+        setattr(st, name, getattr(sys.modules[__name__], name))
+    hyp = ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__version__ = "0.0-repro-stub"
+    return hyp, st

@@ -110,7 +110,18 @@ class SpComputeEngine:
         for kind in team.kinds:
             w = SpWorker(self, kind)
             self._workers.append(w)
+            self._register_with_scheduler(w)
             w.start()
+
+    def _register_with_scheduler(self, w: SpWorker) -> None:
+        reg = getattr(self.scheduler, "register_worker", None)
+        if reg is not None:
+            reg(w.name)
+
+    def _unregister_from_scheduler(self, w: SpWorker) -> None:
+        unreg = getattr(self.scheduler, "unregister_worker", None)
+        if unreg is not None:
+            unreg(w.name)
 
     # ------------------------------------------------------------- graph API
 
@@ -177,8 +188,8 @@ class SpComputeEngine:
                 self.push_many(graph.on_task_finished(task))
             return
 
-    # paper §4.7: commutative accesses require runtime mutual exclusion;
-    # multi-handle locks are taken in sorted-uid order (deadlock freedom).
+        # paper §4.7: commutative accesses require runtime mutual exclusion;
+        # multi-handle locks are taken in sorted-uid order (deadlock freedom).
         locks = []
         if graph is not None:
             from .access import AccessMode
@@ -206,7 +217,16 @@ class SpComputeEngine:
             for lk in reversed(locks):
                 lk.release()
         if token is not None:
-            token.set(task)
+            if task.exception is None:
+                token.set(task)
+            else:
+                # a crashed replica must not win the race: park the error on
+                # the token (surfaced by the select task only if every copy
+                # fails) and let the healthy copies keep going
+                record = getattr(token, "record_failure", None)
+                if record is not None:
+                    record(task.exception)
+                    task.exception = None
         if graph is not None:
             graph.trace_events.append(
                 {
@@ -236,18 +256,21 @@ class SpComputeEngine:
         with self._cv:
             self._workers.append(w)
             w.engine = self
+            self._register_with_scheduler(w)
             self._cv.notify()
 
     def _detach_worker(self, w: SpWorker) -> None:
         with self._cv:
             if w in self._workers:
                 self._workers.remove(w)
+            self._unregister_from_scheduler(w)
 
     def add_workers(self, n: int, kind: str = "ref") -> None:
         for _ in range(n):
             w = SpWorker(self, kind)
             with self._cv:
                 self._workers.append(w)
+                self._register_with_scheduler(w)
             w.start()
 
     def send_workers_to(self, other: "SpComputeEngine", n: int) -> int:

@@ -64,7 +64,8 @@ class FifoScheduler(SpAbstractScheduler):
             return self._q.popleft() if self._q else None
 
     def __len__(self) -> int:
-        return len(self._q)
+        with self._lock:
+            return len(self._q)
 
 
 class LifoScheduler(SpAbstractScheduler):
@@ -81,7 +82,8 @@ class LifoScheduler(SpAbstractScheduler):
             return self._q.pop() if self._q else None
 
     def __len__(self) -> int:
-        return len(self._q)
+        with self._lock:
+            return len(self._q)
 
 
 class PriorityScheduler(SpAbstractScheduler):
@@ -121,21 +123,45 @@ class CriticalPathScheduler(PriorityScheduler):
 
 
 class WorkStealingScheduler(SpAbstractScheduler):
-    """Per-worker deques; owner pops LIFO, thieves steal FIFO."""
+    """Per-worker deques; owner pops LIFO, thieves steal FIFO.
+
+    The engine registers each attached worker (by thread name) via
+    :meth:`register_worker`; pushes round-robin over the registered workers
+    so every deque actually belongs to a live popper.  Before any worker is
+    registered (or after all detach) tasks land in an overflow deque that
+    any popper can steal from.
+    """
+
+    _OVERFLOW = "w0"
 
     def __init__(self, seed: int = 0):
         self._deques: dict[str, collections.deque[Task]] = collections.defaultdict(collections.deque)
+        self._workers: list[str] = []
         self._lock = threading.Lock()
         self._rng = random.Random(seed)
         self._rr = itertools.count()
 
+    def register_worker(self, worker_name: str) -> None:
+        with self._lock:
+            if worker_name not in self._workers:
+                self._workers.append(worker_name)
+                self._deques.setdefault(worker_name, collections.deque())
+
+    def unregister_worker(self, worker_name: str) -> None:
+        """Detach a worker; its unfinished tasks move to the overflow deque."""
+        with self._lock:
+            if worker_name in self._workers:
+                self._workers.remove(worker_name)
+            dq = self._deques.pop(worker_name, None)
+            if dq:
+                self._deques[self._OVERFLOW].extend(dq)
+
     def push(self, task: Task) -> None:
         with self._lock:
-            keys = list(self._deques.keys())
-            if keys:
-                owner = keys[next(self._rr) % len(keys)]
+            if self._workers:
+                owner = self._workers[next(self._rr) % len(self._workers)]
             else:
-                owner = "w0"
+                owner = self._OVERFLOW
             self._deques[owner].append(task)
 
     def pop(self, worker_kind: str = "ref", worker_name: str = "w0") -> Optional[Task]:
@@ -150,7 +176,8 @@ class WorkStealingScheduler(SpAbstractScheduler):
             return self._deques[victim].popleft()
 
     def __len__(self) -> int:
-        return sum(len(d) for d in self._deques.values())
+        with self._lock:
+            return sum(len(d) for d in self._deques.values())
 
 
 def compute_upward_ranks(tasks: list[Task], successors: dict[int, list[Task]]) -> None:

@@ -1,0 +1,66 @@
+"""repro.dist — the distributed layer: sharding, collectives, fault tolerance.
+
+Specx's distributed story (paper §4.4) folds communication into the task
+graph: send/recv are *tasks*, dependencies order them against compute, and a
+background thread progresses them "as early as possible".  This package is
+that story adapted to the JAX substrate (DESIGN.md §2/§5), split in three:
+
+* :mod:`repro.dist.sharding` — mesh context (:func:`use_mesh` /
+  :func:`current_mesh`) and logical-axis sharding rules
+  (:func:`default_rules`, :func:`safe_spec`, :func:`named_sharding`,
+  :func:`shard`).  This is the paper's "where does each piece of data live"
+  question answered declaratively: models annotate logical axes, the rules
+  map them onto whatever mesh is active, and off-mesh everything is the
+  identity — the same model code runs on a laptop and a pod.
+
+* :mod:`repro.dist.collectives` — task-graph collectives (paper §4.4): ring
+  :func:`all_reduce` / :func:`all_gather` built from ``mpi_send`` /
+  ``mpi_recv`` communication tasks over a :class:`~repro.core.ChannelHub`,
+  so the reduce-scatter/all-gather pipeline is *visible to the scheduler* as
+  ordinary dependencies; :func:`hierarchical_psum` (intra-pod reduce-scatter
+  → inter-pod all-reduce → intra-pod all-gather) for the staged backend,
+  where collectives lower to ``jax.lax`` ops instead; and gradient
+  compression (:func:`compress_int8` / :func:`compress_tree` with
+  error-feedback residuals) to cut the bytes those collectives move.
+
+* :mod:`repro.dist.fault` — fault tolerance on top of the engine's
+  cancellation hooks (paper §4.2 dynamic worker teams are the recovery
+  lever): :class:`CancelToken` + :func:`run_duplicated` replicated tasks
+  with first-result-wins, :class:`FailureSimulator` for injecting rank
+  loss, and :func:`remesh_plan` for shrinking the mesh while preserving
+  model parallelism (the elastic re-mesh driven by ``launch/train.py``).
+"""
+from .sharding import (
+    current_mesh,
+    default_rules,
+    named_sharding,
+    safe_spec,
+    shard,
+    use_mesh,
+)
+from .collectives import (
+    all_gather,
+    all_reduce,
+    compress_int8,
+    compress_tree,
+    decompress_int8,
+    hierarchical_psum,
+    init_residuals,
+    ring_all_gather,
+    ring_all_reduce,
+)
+from .fault import (
+    CancelToken,
+    FailureSimulator,
+    RemeshPlan,
+    remesh_plan,
+    run_duplicated,
+)
+
+__all__ = [
+    "current_mesh", "default_rules", "named_sharding", "safe_spec", "shard",
+    "use_mesh", "all_gather", "all_reduce", "compress_int8", "compress_tree",
+    "decompress_int8", "hierarchical_psum", "init_residuals",
+    "ring_all_gather", "ring_all_reduce", "CancelToken", "FailureSimulator",
+    "RemeshPlan", "remesh_plan", "run_duplicated",
+]

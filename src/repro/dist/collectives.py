@@ -1,0 +1,241 @@
+"""Task-graph collectives + gradient compression (paper §4.4, DESIGN.md §5).
+
+Two execution substrates, one API:
+
+* **Eager / hub** — :func:`ring_all_reduce` and :func:`ring_all_gather`
+  build the textbook ring pipelines out of ``mpi_send`` / ``mpi_recv``
+  *communication tasks* over a :class:`~repro.core.ChannelHub`.  Every
+  chunk hop is an ordinary graph node, so the scheduler sees (and can
+  overlap) the whole reduce-scatter/all-gather pipeline — the paper's
+  "communications are incorporated into the task graph", extended from
+  point-to-point to collectives the way DuctTeip layers distributed
+  reductions over local task scheduling.
+
+* **Staged** — inside ``shard_map``/``jit`` the same reductions lower to
+  ``jax.lax`` collectives; :func:`hierarchical_psum` is the pod-aware
+  three-stage variant (intra-pod reduce-scatter → inter-pod all-reduce on
+  the scattered shards → intra-pod all-gather) that keeps the slow
+  inter-pod links moving ``1/inner`` of the bytes.
+
+Gradient compression (:func:`compress_int8`, :func:`compress_tree`) shrinks
+what the collectives carry: symmetric per-tensor int8 with error-feedback
+residuals (:func:`init_residuals`), so quantization error is re-injected
+into the next step instead of lost.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.access import SpData, SpRead, SpWrite
+from repro.core.comm import SpCommGroup, mpi_recv, mpi_send
+from repro.core.graph import SpTaskGraph
+from repro.core.task import TaskView
+
+
+# ---------------------------------------------------------------------------
+# Ring collectives over the ChannelHub (eager task-graph substrate).
+# ---------------------------------------------------------------------------
+
+def ring_all_reduce(
+    graph: SpTaskGraph,
+    group: SpCommGroup,
+    x: SpData,
+    *,
+    op: str = "sum",
+    tag: int = 0,
+) -> TaskView:
+    """Insert a chunked ring all-reduce for ``x`` into ``graph``.
+
+    Every rank calls this with its own (graph, group, cell); the hub wires
+    the rings together.  ``x.value`` is replaced by the reduced array; the
+    returned view's value is the same array.  ``op`` is ``"sum"`` or
+    ``"mean"``.  2·(S−1) hops per chunk — bandwidth-optimal.
+    """
+    if op not in ("sum", "mean"):
+        raise ValueError(f"unsupported op {op!r}; use 'sum' or 'mean'")
+    S, r = group.size, group.rank
+    if S == 1:
+        return graph.task(SpRead(x), lambda v: v, name=f"allreduce{tag}.id")
+    right, left = (r + 1) % S, (r - 1) % S
+    chunks = [SpData(None, f"ar{tag}.r{r}.c{i}") for i in range(S)]
+    meta: dict = {}
+
+    def split(v, *refs):
+        a = np.asarray(v)
+        meta["shape"], meta["dtype"] = a.shape, a.dtype
+        for ref, piece in zip(refs, np.array_split(a.reshape(-1), S)):
+            ref.value = piece.copy()
+        return None
+
+    graph.task(SpRead(x), *[SpWrite(c) for c in chunks], split,
+               name=f"allreduce{tag}.split")
+
+    # reduce-scatter: after S-1 steps rank r owns the reduced chunk (r+1)%S
+    for step in range(S - 1):
+        send_idx = (r - step) % S
+        recv_idx = (r - step - 1) % S
+        mpi_send(graph, group, chunks[send_idx], dest=right,
+                 tag=("rar", tag, "rs", step))
+        tmp = SpData(None, f"ar{tag}.r{r}.rs{step}")
+        mpi_recv(graph, group, tmp, src=left, tag=("rar", tag, "rs", step))
+        graph.task(
+            SpRead(tmp), SpWrite(chunks[recv_idx]),
+            lambda v, ref: setattr(ref, "value", ref.value + v),
+            name=f"allreduce{tag}.acc{step}",
+        )
+
+    # all-gather: circulate the reduced chunks
+    for step in range(S - 1):
+        send_idx = (r + 1 - step) % S
+        recv_idx = (r - step) % S
+        mpi_send(graph, group, chunks[send_idx], dest=right,
+                 tag=("rar", tag, "ag", step))
+        mpi_recv(graph, group, chunks[recv_idx], src=left,
+                 tag=("rar", tag, "ag", step))
+
+    def concat(*args):
+        *vals, ref = args
+        full = np.concatenate([np.asarray(v).reshape(-1) for v in vals])
+        if op == "mean":
+            full = full / S
+        ref.value = full.astype(meta["dtype"]).reshape(meta["shape"])
+        return ref.value
+
+    return graph.task(*[SpRead(c) for c in chunks], SpWrite(x), concat,
+                      name=f"allreduce{tag}.concat")
+
+
+def ring_all_gather(
+    graph: SpTaskGraph,
+    group: SpCommGroup,
+    x: SpData,
+    *,
+    tag: int = 0,
+) -> TaskView:
+    """Ring all-gather: the returned view's value is the list of every
+    rank's ``x.value``, ordered by rank (same list on all ranks)."""
+    S, r = group.size, group.rank
+    if S == 1:
+        return graph.task(SpRead(x), lambda v: [v], name=f"allgather{tag}.id")
+    right, left = (r + 1) % S, (r - 1) % S
+    slots = [SpData(None, f"ag{tag}.r{r}.s{i}") for i in range(S)]
+    graph.task(SpRead(x), SpWrite(slots[r]),
+               lambda v, ref: setattr(ref, "value", v),
+               name=f"allgather{tag}.seed")
+    for step in range(S - 1):
+        send_idx = (r - step) % S
+        recv_idx = (r - step - 1) % S
+        mpi_send(graph, group, slots[send_idx], dest=right,
+                 tag=("rag", tag, step))
+        mpi_recv(graph, group, slots[recv_idx], src=left,
+                 tag=("rag", tag, step))
+    return graph.task(*[SpRead(s) for s in slots], lambda *vals: list(vals),
+                      name=f"allgather{tag}.collect")
+
+
+# ---------------------------------------------------------------------------
+# Staged-substrate collectives (lower to jax.lax inside shard_map / jit).
+# ---------------------------------------------------------------------------
+
+def all_reduce(
+    x,
+    *,
+    axis=None,
+    graph: Optional[SpTaskGraph] = None,
+    group: Optional[SpCommGroup] = None,
+    op: str = "sum",
+    tag: int = 0,
+):
+    """Substrate-dispatching all-reduce: with (graph, group) → hub ring;
+    with ``axis`` (a mesh axis name, inside shard_map) → ``jax.lax``."""
+    if graph is not None:
+        if group is None:
+            raise ValueError("hub all_reduce needs both graph and group")
+        return ring_all_reduce(graph, group, x, op=op, tag=tag)
+    if axis is None:
+        raise ValueError("staged all_reduce needs axis=<mesh axis name>")
+    return jax.lax.pmean(x, axis) if op == "mean" else jax.lax.psum(x, axis)
+
+
+def all_gather(
+    x,
+    *,
+    axis=None,
+    graph: Optional[SpTaskGraph] = None,
+    group: Optional[SpCommGroup] = None,
+    tag: int = 0,
+):
+    """Substrate-dispatching all-gather (see :func:`all_reduce`)."""
+    if graph is not None:
+        if group is None:
+            raise ValueError("hub all_gather needs both graph and group")
+        return ring_all_gather(graph, group, x, tag=tag)
+    if axis is None:
+        raise ValueError("staged all_gather needs axis=<mesh axis name>")
+    return jax.lax.all_gather(x, axis)
+
+
+def hierarchical_psum(x, *, pod_axis: str = "pod", inner_axis: str = "data"):
+    """Pod-aware psum: reduce-scatter over ``inner_axis``, all-reduce the
+    scattered shards over ``pod_axis``, all-gather over ``inner_axis``.
+
+    Numerically equal to ``jax.lax.psum(x, (pod_axis, inner_axis))`` but the
+    slow inter-pod hop carries ``1/inner`` of the bytes.  Must be called
+    inside ``shard_map`` with both axes bound.
+    """
+    inner = jax.lax.psum(1, inner_axis)  # static axis size (constant-folded)
+    n = x.size
+    flat = x.reshape(-1)
+    pad = (-n) % inner
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    piece = jax.lax.psum_scatter(flat, inner_axis, scatter_dimension=0, tiled=True)
+    piece = jax.lax.psum(piece, pod_axis)
+    full = jax.lax.all_gather(piece, inner_axis, axis=0, tiled=True)
+    return full[:n].reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression with error feedback.
+# ---------------------------------------------------------------------------
+
+def compress_int8(g, *, eps: float = 1e-8):
+    """Symmetric per-tensor int8 quantization: ``(q, scale)`` with
+    ``q = round(g / scale)`` and ``scale = max|g| / 127``.  The round-trip
+    error of every element is bounded by ``scale / 2``."""
+    g = jnp.asarray(g, jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), eps) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def init_residuals(grads):
+    """Zero error-feedback residuals shaped like ``grads`` (float32)."""
+    return jax.tree.map(lambda g: jnp.zeros(jnp.shape(g), jnp.float32), grads)
+
+
+def compress_tree(grads, residuals):
+    """Quantize-dequantize every leaf with error feedback.
+
+    Returns ``(dequantized, new_residuals)``: the residual (what int8 lost
+    this step) is added back before quantizing next step, so the long-run
+    mean of the dequantized stream converges to the true gradient.
+    """
+    flat, treedef = jax.tree.flatten(grads)
+    rflat = treedef.flatten_up_to(residuals)
+    deq_leaves, res_leaves = [], []
+    for g, r in zip(flat, rflat):
+        corrected = jnp.asarray(g, jnp.float32) + r
+        q, scale = compress_int8(corrected)
+        deq = decompress_int8(q, scale)
+        deq_leaves.append(deq)
+        res_leaves.append(corrected - deq)
+    return treedef.unflatten(deq_leaves), treedef.unflatten(res_leaves)

@@ -1,0 +1,208 @@
+"""Fault tolerance: duplicated tasks, failure injection, elastic re-mesh.
+
+Three mechanisms (DESIGN.md §5), all riding on machinery the core runtime
+already has:
+
+* :class:`CancelToken` + :func:`run_duplicated` — straggler/fault mitigation
+  by replication.  ``n`` copies of a task race; the first to finish claims
+  the token, and the engine's cancellation hook (``SpComputeEngine._execute``
+  checks ``task.cancel_token`` before running) turns every not-yet-started
+  copy into a no-op.  First-result-wins, the select is deterministic because
+  all copies compute the same pure function.
+
+* :class:`FailureSimulator` — scripted rank loss for tests and the launcher:
+  a ``{step: ranks_lost}`` plan checked once per training step.
+
+* :func:`remesh_plan` — given the surviving chip count, compute the largest
+  mesh that preserves model parallelism (a param-sharding-compatible
+  ``model`` axis) by shrinking the pure-data axes, idling any remainder
+  chips.  Because ``repro.dist.sharding.safe_spec`` replicates anything the
+  mesh cannot divide, a plan produced here can always restore a checkpoint
+  taken on the bigger mesh (the elastic story exercised end-to-end in
+  ``tests/test_multidevice.py``).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+from repro.core.access import SpCommutativeWrite, SpData, SpRead
+from repro.core.graph import SpTaskGraph
+from repro.core.task import TaskView
+
+
+class CancelToken:
+    """First-result-wins latch shared by a set of duplicated tasks.
+
+    ``set(task)`` claims the token (only the first claim sticks and records
+    ``winner``); ``is_set()`` is the engine's pre-execution cancellation
+    check.  A copy that *raised* must not claim the token — the engine
+    records it via :meth:`record_failure` instead, so healthy replicas keep
+    racing and the failure is only surfaced if every copy loses.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._event = threading.Event()
+        self._claimed = False
+        self.winner = None
+        self.failures: list[BaseException] = []
+
+    def set(self, task=None) -> bool:
+        """Claim the token for ``task``; True iff this call won."""
+        with self._lock:
+            if self._claimed:
+                return False
+            self._claimed = True
+            self.winner = task
+            self._event.set()
+            return True
+
+    def record_failure(self, exc: BaseException) -> None:
+        with self._lock:
+            self.failures.append(exc)
+
+    def is_set(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._event.wait(timeout)
+
+
+def run_duplicated(
+    graph: SpTaskGraph,
+    fn: Callable,
+    inputs: Sequence[SpData],
+    out: SpData,
+    *,
+    n: int = 2,
+    name: str = "dup",
+    cost: float = 1.0,
+) -> TaskView:
+    """Insert ``n`` replicated copies of ``fn(*inputs) -> out`` plus a
+    select task; returns the select's view (its value is the winner's
+    result).
+
+    Copies write ``out`` commutatively (order-free, mutually exclusive), so
+    the scheduler may run them concurrently on different workers; whichever
+    finishes first claims the shared :class:`CancelToken` and the engine
+    cancels the stragglers before they start.  ``fn`` must be pure — a
+    copy that already started when the winner finished simply recomputes
+    the same value.
+    """
+    if n < 1:
+        raise ValueError("need at least one copy")
+    token = CancelToken()
+
+    def body(*args):
+        *vals, ref = args
+        ref.value = fn(*vals)
+        return ref.value
+
+    for i in range(n):
+        view = graph.task(
+            *[SpRead(d) for d in inputs],
+            SpCommutativeWrite(out),
+            body,
+            name=f"{name}.copy{i}",
+            cost=cost,
+        )
+        view.task.cancel_token = token
+
+    def select(v):
+        if token.winner is None:
+            raise RuntimeError(
+                f"{name}: all {n} duplicated copies failed"
+            ) from (token.failures[0] if token.failures else None)
+        return v
+
+    return graph.task(SpRead(out), select, name=f"{name}.select")
+
+
+class FailureSimulator:
+    """Scripted rank loss: ``plan`` maps step → number of ranks lost when
+    that step is reached.  Drivers call :meth:`check` once per step."""
+
+    def __init__(self, plan: dict[int, int]):
+        self.plan = dict(plan)
+        self.events: list[tuple[int, int]] = []
+
+    def check(self, step: int) -> int:
+        """Ranks lost at ``step`` (0 if none); records the event.  Each
+        planned failure fires exactly once — the rank stays dead, so
+        replaying the step after a restore must not kill it again."""
+        lost = int(self.plan.pop(step, 0))
+        if lost:
+            self.events.append((step, lost))
+        return lost
+
+    @property
+    def total_lost(self) -> int:
+        return sum(n for _, n in self.events)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"FailureSimulator({self.plan}, lost={self.total_lost})"
+
+
+@dataclass(frozen=True)
+class RemeshPlan:
+    """A shrunken mesh layout: build it with
+    ``jax.sharding.Mesh(devices[:n_chips].reshape(shape), axes)``."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    n_chips: int
+    dropped_chips: int  # failed + idled (alive but unused) chips
+    model_parallel: int
+
+
+def remesh_plan(
+    n_total: int,
+    n_failed: int,
+    *,
+    model_parallel: int,
+    pod_size: Optional[int] = None,
+) -> RemeshPlan:
+    """Largest mesh on the survivors of ``n_total`` chips that preserves a
+    ``model`` axis of exactly ``model_parallel``.
+
+    The ``model`` axis must survive intact (param shards per layer stay
+    addressable); only pure-data axes shrink.  With ``pod_size``, whole
+    surviving pods keep the 3-axis ``(pod, data, model)`` layout; once fewer
+    than two full pods survive, the plan collapses to single-pod
+    ``(data, model)`` over all remaining chips.  Raises ``RuntimeError``
+    when fewer than ``model_parallel`` chips survive — at that point the
+    job cannot continue and must be rescheduled, not re-meshed.
+    """
+    if model_parallel < 1:
+        raise ValueError("model_parallel must be >= 1")
+    alive = n_total - n_failed
+    if alive < model_parallel:
+        raise RuntimeError(
+            f"{alive} chips survive of {n_total}; cannot preserve "
+            f"model_parallel={model_parallel} — reschedule instead of re-mesh"
+        )
+    if pod_size is not None and pod_size % model_parallel:
+        raise ValueError("pod_size must be a multiple of model_parallel")
+    if pod_size is not None:
+        pods = alive // pod_size
+        if pods >= 2:
+            data = pod_size // model_parallel
+            n_chips = pods * pod_size
+            return RemeshPlan(
+                (pods, data, model_parallel),
+                ("pod", "data", "model"),
+                n_chips,
+                n_total - n_chips,
+                model_parallel,
+            )
+    data = alive // model_parallel
+    n_chips = data * model_parallel
+    return RemeshPlan(
+        (data, model_parallel),
+        ("data", "model"),
+        n_chips,
+        n_total - n_chips,
+        model_parallel,
+    )

@@ -1,0 +1,146 @@
+"""Mesh context + logical-axis sharding rules (DESIGN.md §5).
+
+Models never mention mesh axes.  They annotate arrays with *logical* axes
+("batch", "heads", "ff", ...) via :func:`shard`, and parameter definitions
+carry logical axes per dimension (``repro.models.param.ParamDef``).  A rules
+table maps logical axes onto the axes of whatever mesh is active:
+
+* ``use_mesh(mesh)`` pushes a mesh context (a plain context manager; the
+  stack lives in a :class:`contextvars.ContextVar`, so nested/overlapping
+  contexts in async code stay isolated.  Helper threads — prefetch,
+  checkpoint commit, engine workers — start from an *empty* context and
+  deliberately see no mesh: :func:`shard` degrades to the identity there,
+  which is correct because all tracing/sharding decisions happen on the
+  thread that entered ``use_mesh``);
+* ``safe_spec`` turns (shape, logical axes) into a ``PartitionSpec``,
+  silently *replicating* any dimension the mesh cannot divide evenly — the
+  invariant that makes elastic re-mesh (``repro.dist.fault.remesh_plan``)
+  safe: a shrunken mesh can always load the same model, at worst with less
+  parallelism;
+* off-mesh (no ``use_mesh`` active) every helper degrades to the identity,
+  so the same model code runs unsharded in unit tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+_mesh_stack: contextvars.ContextVar[tuple] = contextvars.ContextVar(
+    "repro_mesh_stack", default=()
+)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Activate ``mesh`` for the dynamic extent of the ``with`` block."""
+    token = _mesh_stack.set(_mesh_stack.get() + (mesh,))
+    try:
+        yield mesh
+    finally:
+        _mesh_stack.reset(token)
+
+
+def current_mesh():
+    """The innermost active mesh, or ``None`` outside any ``use_mesh``."""
+    stack = _mesh_stack.get()
+    return stack[-1] if stack else None
+
+
+def default_rules() -> dict:
+    """Logical axis → candidate mesh axes (major-to-minor preference).
+
+    ``batch`` spreads over all pure-data axes (``pod`` × ``data``); tensor
+    dimensions (heads, ff, experts, vocab, kv sequence) go to ``model``.
+    Dimensions mapped to ``None`` are always replicated.  Each mesh axis is
+    used at most once per spec; first dimension wins.
+    """
+    return {
+        "batch": ("pod", "data"),
+        "act_seq": None,       # activation sequence stays local to a shard
+        "kv_seq": ("model",),  # decode KV caches are sequence-sharded
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ff": ("model",),
+        "expert_ff": ("model",),
+        "experts": ("model",),
+        "vocab": ("model",),
+        "embed": None,
+        "head_dim": None,
+        "layers": None,
+    }
+
+
+def _axis_product(mesh_shape: dict, axes: Sequence[str]) -> int:
+    return math.prod(mesh_shape[a] for a in axes)
+
+
+def safe_spec(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    *,
+    mesh=None,
+    rules: Optional[dict] = None,
+) -> PartitionSpec:
+    """PartitionSpec for ``shape`` under the rules, dropping anything the
+    mesh cannot divide.  ``mesh`` only needs a ``.shape`` mapping (so plans
+    can be checked without devices); defaults to :func:`current_mesh`.
+    """
+    if len(shape) != len(axes):
+        raise ValueError(f"shape {shape} / axes {axes} rank mismatch")
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None:
+        return PartitionSpec(*(None,) * len(shape))
+    rules = rules if rules is not None else default_rules()
+    mesh_shape = dict(mesh.shape)
+    used: set[str] = set()
+    entries: list = []
+    for dim, logical in zip(shape, axes):
+        target = rules.get(logical) if logical is not None else None
+        if target is None:
+            entries.append(None)
+            continue
+        cand = [a for a in ((target,) if isinstance(target, str) else target)
+                if a in mesh_shape and a not in used]
+        # drop major axes until the shard count divides the dimension
+        while cand and dim % _axis_product(mesh_shape, cand) != 0:
+            cand.pop(0)
+        if not cand:
+            entries.append(None)
+            continue
+        used.update(cand)
+        entries.append(cand[0] if len(cand) == 1 else tuple(cand))
+    return PartitionSpec(*entries)
+
+
+def named_sharding(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    *,
+    rules: Optional[dict] = None,
+) -> NamedSharding:
+    """NamedSharding on the active mesh (requires a ``use_mesh`` context)."""
+    mesh = current_mesh()
+    if mesh is None:
+        raise RuntimeError(
+            "named_sharding() requires an active mesh; wrap the call in "
+            "`with use_mesh(mesh):`"
+        )
+    return NamedSharding(mesh, safe_spec(shape, axes, mesh=mesh, rules=rules))
+
+
+def shard(x: jax.Array, *axes: Optional[str], rules: Optional[dict] = None) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axes; identity off-mesh.
+
+    Used inside jitted model code: ``x = shard(x, "batch", "act_seq", None)``.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, safe_spec(x.shape, axes, mesh=mesh, rules=rules))
+    )

@@ -6,10 +6,19 @@ failure simulation + elastic re-mesh, resume-from-latest.
 
     PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --reduced \
         --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ck --ckpt-every 20
+
+Elastic fault tolerance (``--fail-at STEP:RANKS``): a
+:class:`~repro.dist.fault.FailureSimulator` injects a rank loss at STEP;
+the launcher computes a :func:`~repro.dist.fault.remesh_plan` over the
+survivors (preserving model parallelism), rebuilds the mesh, restores from
+the latest checkpoint (falling back to re-sharding the in-memory state) and
+resumes — the data-pipeline cursor is the step counter, so resumption is
+deterministic.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -19,6 +28,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, reduced_config
 from repro.data import Prefetcher, SyntheticLMDataset
+from repro.dist.fault import FailureSimulator, remesh_plan
 from repro.dist.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models.config import ShapeSpec
@@ -29,6 +39,19 @@ from repro.runtime.train import (
     init_train_state,
     train_state_shardings,
 )
+
+
+def _parse_fail_at(spec: str) -> FailureSimulator:
+    try:
+        step_s, ranks_s = spec.split(":")
+        step, ranks = int(step_s), int(ranks_s)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"expected STEP:RANKS integers, got {spec!r}")
+    if step < 1:
+        raise argparse.ArgumentTypeError("STEP must be >= 1 (checked after each step)")
+    if ranks < 1:
+        raise argparse.ArgumentTypeError("RANKS must be >= 1")
+    return FailureSimulator({step: ranks})
 
 
 def main(argv=None) -> dict:
@@ -45,68 +68,123 @@ def main(argv=None) -> dict:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--schedule-policy", default="overlap")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument(
+        "--fail-at", default=None, metavar="STEP:RANKS", type=_parse_fail_at,
+        help="simulate losing RANKS chips at STEP, then elastically re-mesh",
+    )
     args = ap.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     shape = ShapeSpec("train", "train", args.seq, args.batch)
     ds = SyntheticLMDataset(cfg, shape, seed=0)
-    mesh = make_host_mesh() if len(jax.devices()) > 1 else None
     mgr = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
+    sim = args.fail_at
 
-    ctx = use_mesh(mesh) if mesh is not None else _null_ctx()
-    with ctx:
-        lr = linear_warmup_cosine(args.lr, warmup=10, total_steps=args.steps)
-        art = build_train_step(
-            cfg,
-            n_microbatches=args.microbatches,
-            schedule_policy=args.schedule_policy,
-            lr_schedule=lr,
-            donate=False,
+    n_devices = len(jax.devices())
+    mesh = make_host_mesh() if n_devices > 1 else None
+    lr = linear_warmup_cosine(args.lr, warmup=10, total_steps=args.steps)
+
+    start_step = 0
+    state = None
+    losses: list[float] = []  # losses[i] is the loss of step base_step + i + 1
+    base_step = None
+    remeshed = False
+    # only checkpoints this process saved (or explicitly opted into via
+    # --resume) may be restored after a failure — a stale dir from an
+    # earlier run must not hijack the step counter
+    restorable = args.resume
+
+    while start_step < args.steps:
+        failed_ranks = 0
+        ctx = use_mesh(mesh) if mesh is not None else contextlib.nullcontext()
+        with ctx:
+            art = build_train_step(
+                cfg,
+                n_microbatches=args.microbatches,
+                schedule_policy=args.schedule_policy,
+                lr_schedule=lr,
+                donate=False,
+            )
+            if remeshed:
+                # re-entering after a re-mesh: prefer the durable checkpoint,
+                # fall back to re-sharding the surviving in-memory state
+                remeshed = False
+                if restorable and mgr is not None and mgr.latest_step() is not None:
+                    start_step, state = mgr.restore(abstract_train_state(cfg))
+                    # drop losses of the steps the restore will replay
+                    if start_step < base_step:
+                        losses.clear()
+                        base_step = start_step
+                    else:
+                        del losses[start_step - base_step:]
+                    print(f"[train] restored step {start_step} onto new mesh")
+                else:
+                    state = jax.device_put(state, train_state_shardings(cfg))
+            elif mgr is not None and args.resume and mgr.latest_step() is not None:
+                start_step, state = mgr.restore(abstract_train_state(cfg))
+                print(f"[train] resumed from step {start_step}")
+            else:
+                state = init_train_state(jax.random.PRNGKey(0), cfg)
+                if mesh is not None:
+                    state = jax.device_put(state, train_state_shardings(cfg))
+            if base_step is None:
+                base_step = start_step
+
+            pf = Prefetcher(ds, start_step=start_step, depth=2)
+            seg_t0, seg_steps = time.perf_counter(), 0
+            try:
+                for _ in range(start_step, args.steps):
+                    step_idx, batch = pf.get()
+                    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                    state, metrics = art(state, batch)
+                    loss = float(metrics["loss"])
+                    losses.append(loss)
+                    seg_steps += 1
+                    s = int(state.step)
+                    if args.log_every and s % args.log_every == 0:
+                        dt = (time.perf_counter() - seg_t0) / seg_steps
+                        print(
+                            f"[train] step {s:5d} loss {loss:8.4f} "
+                            f"gnorm {float(metrics['grad_norm']):7.3f} {dt * 1e3:7.1f} ms/step",
+                            flush=True,
+                        )
+                    if mgr is not None and args.ckpt_every and s % args.ckpt_every == 0:
+                        mgr.save(s, state)  # async commit
+                        restorable = True
+                    if sim is not None:
+                        failed_ranks = sim.check(s)
+                        if failed_ranks and mesh is None:
+                            print("[train] failure injected but only one device; continuing")
+                            failed_ranks = 0
+                        if failed_ranks:
+                            break
+            finally:
+                pf.stop()
+                if mgr is not None:
+                    mgr.wait()
+            start_step = int(state.step)
+
+        if not failed_ranks:
+            break
+        plan = remesh_plan(
+            int(np.prod(tuple(mesh.shape.values()))),
+            failed_ranks,
+            model_parallel=int(mesh.shape["model"]),
         )
-        start_step = 0
-        if mgr is not None and args.resume and mgr.latest_step() is not None:
-            template = abstract_train_state(cfg)
-            start_step, state = mgr.restore(template)
-            print(f"[train] resumed from step {start_step}")
-        else:
-            state = init_train_state(jax.random.PRNGKey(0), cfg)
-            if mesh is not None:
-                state = jax.device_put(state, train_state_shardings(cfg))
+        devices = np.array(jax.devices()[: plan.n_chips]).reshape(plan.shape)
+        mesh = jax.sharding.Mesh(devices, plan.axes)
+        remeshed = True
+        print(
+            f"[train] lost {failed_ranks} ranks at step {start_step}; "
+            f"re-meshed to {plan.shape} ({plan.dropped_chips} chips dropped)"
+        )
 
-        pf = Prefetcher(ds, start_step=start_step, depth=2)
-        losses = []
-        t0 = time.perf_counter()
-        try:
-            for _ in range(start_step, args.steps):
-                step_idx, batch = pf.get()
-                batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                state, metrics = art(state, batch)
-                loss = float(metrics["loss"])
-                losses.append(loss)
-                s = int(state.step)
-                if args.log_every and s % args.log_every == 0:
-                    dt = (time.perf_counter() - t0) / max(len(losses), 1)
-                    print(
-                        f"[train] step {s:5d} loss {loss:8.4f} "
-                        f"gnorm {float(metrics['grad_norm']):7.3f} {dt * 1e3:7.1f} ms/step",
-                        flush=True,
-                    )
-                if mgr is not None and args.ckpt_every and s % args.ckpt_every == 0:
-                    mgr.save(s, state)  # async commit
-        finally:
-            pf.stop()
-            if mgr is not None:
-                mgr.wait()
-    print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
-    return {"losses": losses, "final_step": int(state.step)}
-
-
-class _null_ctx:
-    def __enter__(self):
-        return None
-
-    def __exit__(self, *a):
-        return False
+    if losses:
+        print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    else:
+        print("[train] nothing to do: start step >= --steps")
+    final_step = int(state.step) if state is not None else start_step
+    return {"losses": losses, "final_step": final_step}
 
 
 if __name__ == "__main__":

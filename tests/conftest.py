@@ -2,3 +2,14 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Prefer the real hypothesis; fall back to the dependency-free stub so the
+# property tests still collect and run in minimal environments.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from repro._compat import hypothesis_stub
+
+    _hyp, _st = hypothesis_stub._as_modules()
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
