@@ -1,0 +1,176 @@
+"""Engine hot-path benchmark → ``BENCH_engine.json`` (perf trajectory).
+
+Two workloads, three scheduling policies (FIFO, plain work stealing,
+locality-aware work stealing), several team sizes:
+
+* **dispatch** — chains of empty-body tasks.  Nothing to compute, so the
+  wall clock *is* the runtime: ``us_per_task`` here is the per-task
+  dispatch overhead (insert → ready → pop → execute → release).  This is
+  the number the CI smoke job gates on (>2× regression fails).
+* **scaling** — the ``engine_scaling.py`` protocol with data dependencies:
+  ``n_chains = 2 × n_workers`` independent chains whose task bodies sleep a
+  fixed duration (sleeps release the GIL, so worker threads genuinely
+  overlap on small containers).  Chained writes give the locality push its
+  signal: each task's input was produced by the worker that ran its
+  predecessor.
+
+Results are best-of-``reps`` per configuration — the engine runs on shared
+noisy containers and we track the achievable envelope, not the draw of the
+load average.  Work-stealing rows also record the scheduler's push/pop/steal
+counters (``WorkStealingScheduler.stats()``), so hit rates are part of the
+trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import (
+    FifoScheduler,
+    SpComputeEngine,
+    SpData,
+    SpTaskGraph,
+    SpWorkerTeamBuilder,
+    SpWrite,
+    WorkStealingScheduler,
+)
+
+SCHEDULER_FACTORIES = {
+    "fifo": lambda: FifoScheduler(),
+    "work_stealing": lambda: WorkStealingScheduler(locality=False),
+    "locality_work_stealing": lambda: WorkStealingScheduler(locality=True),
+}
+
+
+def run_chains(
+    scheduler_name: str,
+    n_workers: int,
+    n_chains: int,
+    chain_len: int,
+    duration: float = 0.0,
+) -> dict:
+    """One measured run: ``n_chains`` independent write-chains of
+    ``chain_len`` tasks each, bodies sleeping ``duration`` seconds
+    (0 = empty body, pure dispatch).  Production settings: ``trace=False``
+    so the run allocates no per-task trace events."""
+    sched = SCHEDULER_FACTORIES[scheduler_name]()
+    eng = SpComputeEngine(
+        SpWorkerTeamBuilder.team_of_cpu_workers(n_workers), scheduler=sched
+    )
+    try:
+        tg = SpTaskGraph(trace=False)
+        cells = [SpData(0, f"c{i}") for i in range(n_chains)]
+        tg.compute_on(eng)
+        body = (lambda ref: time.sleep(duration)) if duration > 0 else (lambda ref: None)
+        t0 = time.perf_counter()
+        for _step in range(chain_len):
+            for c in range(n_chains):
+                tg.task(SpWrite(cells[c]), body)
+        tg.wait_all_tasks()
+        wall = time.perf_counter() - t0
+        n_tasks = n_chains * chain_len
+        row = {
+            "scheduler": scheduler_name,
+            "n_workers": n_workers,
+            "n_tasks": n_tasks,
+            "task_duration_s": duration,
+            "wall_s": wall,
+            "tasks_per_s": n_tasks / wall,
+            "us_per_task": wall / n_tasks * 1e6,
+        }
+        stats = getattr(sched, "stats", None)
+        if stats is not None:
+            s = stats()
+            row["stats"] = {
+                k: round(v, 4) if isinstance(v, float) else v for k, v in s.items()
+            }
+        return row
+    finally:
+        eng.stop()
+
+
+def _measure_interleaved(configs: list[tuple], reps: int) -> list[dict]:
+    """Best-of-``reps`` per config, with configs *interleaved* across reps:
+    shared-container load drifts on the scale of seconds, so measuring all
+    of scheduler A then all of scheduler B would bias the comparison —
+    round-robin keeps every config exposed to the same drift."""
+    best: dict[int, dict] = {}
+    for _rep in range(reps):
+        for i, args in enumerate(configs):
+            r = run_chains(*args)
+            if i not in best or r["tasks_per_s"] > best[i]["tasks_per_s"]:
+                best[i] = r
+    return [best[i] for i in range(len(configs))]
+
+
+def run_suite(smoke: bool = False) -> dict:
+    reps = 2 if smoke else 5
+    chain_len = 100 if smoke else 400
+    scale_len = 40 if smoke else 120
+    scale_workers = (2, 4) if smoke else (2, 4, 8)
+    dispatch = _measure_interleaved(
+        [(name, w, 2 * w, chain_len, 0.0) for name in SCHEDULER_FACTORIES for w in (1, 4)],
+        reps,
+    )
+    scaling = _measure_interleaved(
+        [
+            (name, w, 2 * w, scale_len, 2e-4)
+            for name in SCHEDULER_FACTORIES
+            for w in scale_workers
+        ],
+        reps,
+    )
+    return {
+        "meta": {
+            "smoke": smoke,
+            "cpus": os.cpu_count(),
+            "reps": reps,
+            "schedulers": list(SCHEDULER_FACTORIES),
+            "workload": "independent write-chains (2x workers), empty-body for "
+            "dispatch overhead, 0.2 ms sleep bodies for scaling",
+        },
+        "dispatch": dispatch,
+        "scaling": scaling,
+    }
+
+
+def compare_against_baseline(current: dict, baseline: dict, factor: float = 2.0) -> list[str]:
+    """Regression check for CI: per-task dispatch overhead must stay within
+    ``factor`` × the checked-in baseline for every matching configuration.
+    Returns a list of human-readable failures (empty = pass)."""
+    base_by_key = {
+        (r["scheduler"], r["n_workers"]): r for r in baseline.get("dispatch", ())
+    }
+    failures = []
+    for row in current.get("dispatch", ()):
+        base = base_by_key.get((row["scheduler"], row["n_workers"]))
+        if base is None:
+            continue
+        if row["us_per_task"] > factor * base["us_per_task"]:
+            failures.append(
+                f"dispatch overhead regression: {row['scheduler']} @{row['n_workers']}w "
+                f"{row['us_per_task']:.1f} us/task vs baseline "
+                f"{base['us_per_task']:.1f} us/task (>{factor:.1f}x)"
+            )
+    return failures
+
+
+def main(out: str = "BENCH_engine.json", smoke: bool = False) -> dict:
+    payload = run_suite(smoke=smoke)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print("workload,scheduler,n_workers,tasks_per_s,us_per_task")
+    for section in ("dispatch", "scaling"):
+        for r in payload[section]:
+            print(
+                f"{section},{r['scheduler']},{r['n_workers']},"
+                f"{r['tasks_per_s']:.0f},{r['us_per_task']:.2f}"
+            )
+    return payload
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(smoke="--smoke" in sys.argv)

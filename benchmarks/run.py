@@ -2,8 +2,14 @@
 benches.  Prints ``name,us_per_call,derived`` CSV (harness contract).
 
     PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run --smoke \
+        --out BENCH_engine.smoke.json --baseline BENCH_engine.json
 
 Entries:
+* engine_dispatch / engine_scaling_sched — scheduler×team engine hot-path
+  trajectory, persisted to ``BENCH_engine.json`` (``--smoke`` runs only
+  this section at small sizes and, with ``--baseline``, exits non-zero on
+  a >2× per-task dispatch overhead regression — the CI contract)
 * overhead_write / overhead_commutative — paper Fig. 3 (O and I)
 * gemm_taskgraph — paper §4.8 trace example (throughput + correctness)
 * speculation_mc — paper §3.2/[12] Monte-Carlo speculation speedup
@@ -24,12 +30,65 @@ def _row(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.2f},{derived}", flush=True)
 
 
+def _engine_section(smoke: bool, out: str, baseline: str | None) -> None:
+    """Engine hot-path trajectory (BENCH_engine.json) + CI regression gate."""
+    from benchmarks import engine_bench
+
+    payload = engine_bench.run_suite(smoke=smoke)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    for r in payload["dispatch"]:
+        _row(
+            f"engine_dispatch_{r['scheduler']}_{r['n_workers']}w",
+            r["us_per_task"],
+            f"tasks_per_s={r['tasks_per_s']:.0f}",
+        )
+    for r in payload["scaling"]:
+        stats = r.get("stats", {})
+        derived = f"tasks_per_s={r['tasks_per_s']:.0f}"
+        if stats:
+            derived += (
+                f";local_hit={stats.get('local_hit_rate', 0):.2f}"
+                f";steal={stats.get('steal_rate', 0):.2f}"
+                f";loc_push={stats.get('locality_push_rate', 0):.2f}"
+            )
+        _row(
+            f"engine_scaling_sched_{r['scheduler']}_{r['n_workers']}w",
+            r["us_per_task"],
+            derived,
+        )
+    if baseline and os.path.exists(baseline):
+        with open(baseline) as f:
+            base = json.load(f)
+        failures = engine_bench.compare_against_baseline(payload, base)
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr, flush=True)
+        if failures:
+            sys.exit(1)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="larger sweeps")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="engine section only, small sizes (CI benchmark smoke job)",
+    )
+    ap.add_argument("--out", default="BENCH_engine.json", help="engine bench JSON path")
+    ap.add_argument(
+        "--baseline",
+        default=None,
+        help="checked-in BENCH_engine.json to gate dispatch overhead against",
+    )
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+
+    # ---- engine hot path (BENCH_engine.json trajectory) -------------------
+    _engine_section(args.smoke, args.out, args.baseline)
+    if args.smoke:
+        return
 
     # ---- paper Fig. 3: overhead ------------------------------------------
     from benchmarks import overhead

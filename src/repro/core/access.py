@@ -55,13 +55,17 @@ class SpData:
     runtime never copies it except for speculation snapshots.
     """
 
-    __slots__ = ("name", "value", "version", "uid", "_uncertain_writer")
+    __slots__ = ("name", "value", "version", "uid", "last_writer", "_uncertain_writer")
 
     def __init__(self, value: Any = None, name: str | None = None):
         self.uid = next(_data_ids)
         self.name = name if name is not None else f"data{self.uid}"
         self.value = value
         self.version = 0
+        # Worker (thread name) that last ran a write-like access on this
+        # cell — the locality hint consumed by WorkStealingScheduler.push
+        # (stamped by DataHandle.complete).
+        self.last_writer: str | None = None
         # Set while a MAYBE_WRITE task has been inserted but whose outcome is
         # not yet known; used by the speculation pass (core/speculation.py).
         self._uncertain_writer = None

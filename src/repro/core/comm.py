@@ -296,18 +296,19 @@ class CommThread(threading.Thread):
                     task.t_end = time.perf_counter()
                     graph = getattr(task, "graph", None)
                     if graph is not None:
-                        graph.trace_events.append(
-                            {
-                                "task": task.name,
-                                "uid": task.uid,
-                                "worker": self.name,
-                                "t0": task.t_start,
-                                "t1": task.t_end,
-                                "ready": 0,
-                                "comm": True,
-                                "spec": False,
-                            }
-                        )
+                        if getattr(graph, "trace", True):
+                            graph.trace_events.append(
+                                {
+                                    "task": task.name,
+                                    "uid": task.uid,
+                                    "worker": self.name,
+                                    "t0": task.t_start,
+                                    "t1": task.t_end,
+                                    "ready": 0,
+                                    "comm": True,
+                                    "spec": False,
+                                }
+                            )
                         newly = graph.on_task_finished(task)
                         task.mark_finished()
                         self.engine.push_many(newly)

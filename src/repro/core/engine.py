@@ -38,6 +38,10 @@ class SpWorker(threading.Thread):
         self.engine = engine
         self.target_engine: Optional["SpComputeEngine"] = None  # pending move
         self.alive = True
+        # per-worker parking spot: the engine sets this to hand the worker
+        # new work / a stop / a move, instead of broadcasting on one global
+        # condition variable (paper §4.2 workers are individually addressable)
+        self.wakeup = threading.Event()
 
     def run(self) -> None:  # pragma: no branch - loop
         while self.alive:
@@ -100,13 +104,24 @@ class SpComputeEngine:
         name: str = "ce",
     ):
         self.name = name
-        self.scheduler = scheduler or FifoScheduler()
-        self._cv = threading.Condition()
+        # NB: ``scheduler or Fifo...`` would be wrong — schedulers define
+        # __len__, so a freshly-created (empty) scheduler is falsy and would
+        # be silently swapped for FIFO
+        self.scheduler = scheduler if scheduler is not None else FifoScheduler()
+        # per-worker-deque schedulers take the popping worker's name
+        self._pop_by_name = isinstance(self.scheduler, WorkStealingScheduler)
+        # engine-structure lock (worker list, graph list) — NOT on the
+        # push/pop hot path; the scheduler carries its own locking and idle
+        # workers park on their own events (see _next_task)
+        self._lock = threading.Lock()
+        self._idle_lock = threading.Lock()
+        self._idle: list[SpWorker] = []  # LIFO: most-recently-parked first
         self._running = True
         self._workers: list[SpWorker] = []
         self._graphs: list = []
         self._comm = None  # lazily created CommThread (comm.py)
-        team = team or SpWorkerTeamBuilder.team_of_cpu_workers()
+        if team is None:  # (SpWorkerTeam also defines __len__ — same trap)
+            team = SpWorkerTeamBuilder.team_of_cpu_workers()
         for kind in team.kinds:
             w = SpWorker(self, kind)
             self._workers.append(w)
@@ -126,7 +141,7 @@ class SpComputeEngine:
     # ------------------------------------------------------------- graph API
 
     def register_graph(self, graph) -> None:
-        with self._cv:
+        with self._lock:
             if graph not in self._graphs:
                 self._graphs.append(graph)
 
@@ -141,36 +156,84 @@ class SpComputeEngine:
         if self._is_async_comm(task):
             self._comm_thread().submit(task)
             return
-        with self._cv:
-            self.scheduler.push(task)
-            self._cv.notify()
+        owner = self.scheduler.push(task)
+        self._wake_one(owner)
 
     def push_many(self, tasks: list[Task]) -> None:
         if not tasks:
             return
-        with self._cv:
-            n = 0
-            for t in tasks:
-                if self._is_async_comm(t):
-                    self._comm_thread().submit(t)
-                else:
-                    self.scheduler.push(t)
-                    n += 1
-            if n:
-                self._cv.notify(n)
+        owners = []
+        for t in tasks:
+            if self._is_async_comm(t):
+                self._comm_thread().submit(t)
+            else:
+                owners.append(self.scheduler.push(t))
+        for owner in owners:
+            if not self._wake_one(owner):
+                break  # nobody parked; workers will find the tasks on poll
 
     # ------------------------------------------------------------ worker side
 
+    def _wake_one(self, owner: Optional[str] = None) -> bool:
+        """Unpark one idle worker — preferably ``owner``, the worker whose
+        deque just received the task (locality-aware schedulers return it
+        from ``push``)."""
+        if not self._idle:  # lock-free fast path; parking workers re-check
+            return False    # the scheduler before waiting, so a miss here
+            #                 costs at most one bounded backoff timeout
+        with self._idle_lock:
+            w = None
+            if owner is not None:
+                for i, cand in enumerate(self._idle):
+                    if cand.name == owner:
+                        w = self._idle.pop(i)
+                        break
+            if w is None and self._idle:
+                w = self._idle.pop()
+        if w is not None:
+            w.wakeup.set()
+            return True
+        return False
+
+    # Idle wait: ~1 ms first park doubling to 50 ms.  The timeout is a
+    # safety net — pushes normally unpark a worker explicitly — so the cap
+    # bounds worst-case dispatch latency when a wake is missed (the old
+    # fixed poll burned a 100 ms round trip on EVERY dispatch race).
+    _BACKOFF_MIN = 0.001
+    _BACKOFF_MAX = 0.05
+
+    def _pop(self, worker: SpWorker) -> Optional[Task]:
+        if self._pop_by_name:
+            return self.scheduler.pop(worker.kind, worker.name)
+        return self.scheduler.pop(worker.kind)
+
     def _next_task(self, worker: SpWorker) -> Optional[Task]:
-        with self._cv:
-            while self._running and worker.alive and worker.target_engine is None:
-                if isinstance(self.scheduler, WorkStealingScheduler):
-                    t = self.scheduler.pop(worker.kind, worker.name)
-                else:
-                    t = self.scheduler.pop(worker.kind)
-                if t is not None:
-                    return t
-                self._cv.wait(timeout=0.1)
+        backoff = self._BACKOFF_MIN
+        while self._running and worker.alive and worker.target_engine is None:
+            t = self._pop(worker)
+            if t is not None:
+                # if more work is queued and someone is parked, chain-wake so
+                # a burst push fans out even when only one wake landed (the
+                # unlocked _idle peek keeps this free at steady state)
+                if self._idle and len(self.scheduler) > 0:
+                    self._wake_one()
+                return t
+            # park: register as idle *before* the re-check so a concurrent
+            # push either sees us on the idle list or we see its task
+            worker.wakeup.clear()
+            with self._idle_lock:
+                self._idle.append(worker)
+            t = self._pop(worker)
+            if t is not None:
+                with self._idle_lock:
+                    if worker in self._idle:
+                        self._idle.remove(worker)
+                return t
+            worker.wakeup.wait(timeout=backoff)
+            with self._idle_lock:
+                if worker in self._idle:
+                    self._idle.remove(worker)
+            backoff = min(backoff * 2.0, self._BACKOFF_MAX)
         return None
 
     def _execute(self, task: Task, worker: SpWorker) -> None:
@@ -189,20 +252,9 @@ class SpComputeEngine:
             return
 
         # paper §4.7: commutative accesses require runtime mutual exclusion;
-        # multi-handle locks are taken in sorted-uid order (deadlock freedom).
-        locks = []
-        if graph is not None:
-            from .access import AccessMode
-
-            comm_handles = sorted(
-                (
-                    graph.registry.handle_for(a.data)
-                    for a in task.accesses
-                    if a.mode is AccessMode.COMMUTATIVE_WRITE
-                ),
-                key=lambda h: h.data.uid,
-            )
-            locks = [h.commutative_lock for h in comm_handles]
+        # handles were sorted by uid at insert (deadlock freedom), so the hot
+        # path just walks the precomputed tuple
+        locks = [h.commutative_lock for h in task.commutative_handles]
         for lk in locks:
             lk.acquire()
         task.state = TaskState.RUNNING
@@ -228,18 +280,19 @@ class SpComputeEngine:
                     record(task.exception)
                     task.exception = None
         if graph is not None:
-            graph.trace_events.append(
-                {
-                    "task": task.name,
-                    "uid": task.uid,
-                    "worker": worker.name,
-                    "t0": task.t_start,
-                    "t1": task.t_end,
-                    "ready": len(self.scheduler),
-                    "comm": task.is_comm,
-                    "spec": task.speculative,
-                }
-            )
+            if getattr(graph, "trace", True):
+                graph.trace_events.append(
+                    {
+                        "task": task.name,
+                        "uid": task.uid,
+                        "worker": worker.name,
+                        "t0": task.t_start,
+                        "t1": task.t_end,
+                        "ready": len(self.scheduler),
+                        "comm": task.is_comm,
+                        "spec": task.speculative,
+                    }
+                )
             newly = graph.on_task_finished(task)
             task.mark_finished()
             self.push_many(newly)
@@ -253,36 +306,42 @@ class SpComputeEngine:
         return len(self._workers)
 
     def _attach_worker(self, w: SpWorker) -> None:
-        with self._cv:
+        with self._lock:
             self._workers.append(w)
             w.engine = self
             self._register_with_scheduler(w)
-            self._cv.notify()
 
     def _detach_worker(self, w: SpWorker) -> None:
-        with self._cv:
+        with self._lock:
             if w in self._workers:
                 self._workers.remove(w)
             self._unregister_from_scheduler(w)
+        with self._idle_lock:
+            if w in self._idle:
+                self._idle.remove(w)
+        # orphans may have been drained to the scheduler's overflow deque —
+        # make sure somebody looks at them
+        self._wake_one()
 
     def add_workers(self, n: int, kind: str = "ref") -> None:
         for _ in range(n):
             w = SpWorker(self, kind)
-            with self._cv:
+            with self._lock:
                 self._workers.append(w)
                 self._register_with_scheduler(w)
             w.start()
 
     def send_workers_to(self, other: "SpComputeEngine", n: int) -> int:
         """Move up to ``n`` workers to ``other`` (paper §4.2 dynamic teams)."""
-        moved = 0
-        with self._cv:
+        moved = []
+        with self._lock:
             movable = [w for w in self._workers if w.target_engine is None]
             for w in movable[:n]:
                 w.target_engine = other
-                moved += 1
-            self._cv.notify_all()
-        return moved
+                moved.append(w)
+        for w in moved:  # unpark so the move is taken promptly
+            w.wakeup.set()
+        return len(moved)
 
     # ------------------------------------------------------------------ comm
 
@@ -297,13 +356,15 @@ class SpComputeEngine:
     # ------------------------------------------------------------------ stop
 
     def stop(self) -> None:
-        with self._cv:
+        with self._lock:
             self._running = False
-            for w in self._workers:
+            workers = list(self._workers)
+            for w in workers:
                 w.alive = False
-            self._cv.notify_all()
+        for w in workers:
+            w.wakeup.set()
         me = threading.current_thread()
-        for w in list(self._workers):
+        for w in workers:
             if w is not me:
                 w.join(timeout=5.0)
         if self._comm is not None:

@@ -47,17 +47,26 @@ class SpTaskGraph:
         tg.wait_all_tasks()
     """
 
-    def __init__(self, speculative_model: SpSpeculativeModel = SpSpeculativeModel.SP_NO_SPEC):
+    def __init__(
+        self,
+        speculative_model: SpSpeculativeModel = SpSpeculativeModel.SP_NO_SPEC,
+        *,
+        trace: bool = True,
+    ):
         self.spec_model = speculative_model
         self.registry = HandleRegistry()
         self.tasks: list[Task] = []
+        self._task_by_uid: dict[int, Task] = {}
         self.engine = None  # SpComputeEngine once bound
         self._ready_backlog: list[Task] = []
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._unfinished = 0
         self.errors: list[BaseException] = []
-        # trace events appended by the engine: dicts with task/worker/t0/t1
+        # trace events appended by the engine: dicts with task/worker/t0/t1.
+        # ``trace=False`` turns recording off so the production hot path
+        # allocates nothing per task; exports then see an empty trace.
+        self.trace = trace
         self.trace_events: list[dict] = []
         self.spec_stats = {"speculated": 0, "commits": 0, "rollbacks": 0}
 
@@ -127,6 +136,7 @@ class SpTaskGraph:
         task.inserted_index = len(self.tasks)
         task.graph = self
         self.tasks.append(task)
+        self._task_by_uid[task.uid] = task
         with self._cv:
             self._unfinished += 1
 
@@ -134,12 +144,20 @@ class SpTaskGraph:
         # wired, so a worker completing a predecessor generation mid-insert
         # cannot mark the task ready prematurely.
         task.add_pending(1)
+        commutative = []
         for acc in task.accesses:
             h = self.registry.handle_for(acc.data)
+            if acc.mode is AccessMode.COMMUTATIVE_WRITE:
+                commutative.append(h)
             task.add_pending(1)
             if h.append_access(task, acc.mode):
                 # landed in the already-active generation
                 task.dec_pending()
+        if commutative:
+            # sorted-uid lock order (paper §4.7 deadlock freedom), fixed
+            # here once so the engine never re-derives it per execution
+            commutative.sort(key=lambda h: h.data.uid)
+            task.commutative_handles = tuple(commutative)
         if task.dec_pending():  # drop the guard
             self._dispatch(task)
         return TaskView(task)
@@ -218,8 +236,15 @@ class SpTaskGraph:
             succ[k] = out
         return succ
 
-    def predecessor_counts(self) -> dict[int, int]:
-        succ = self.successor_map()
+    def task_by_uid(self, uid: int) -> Task:
+        """O(1) uid → task lookup (index maintained by :meth:`_insert`)."""
+        return self._task_by_uid[uid]
+
+    def predecessor_counts(self, succ: dict[int, list[Task]] | None = None) -> dict[int, int]:
+        """uid → number of predecessors.  Pass an existing ``successor_map()``
+        to avoid rebuilding it (O(V+E) either way)."""
+        if succ is None:
+            succ = self.successor_map()
         pred: dict[int, int] = {t.uid: 0 for t in self.tasks}
         for _, vs in succ.items():
             for v in vs:
@@ -228,8 +253,9 @@ class SpTaskGraph:
 
     def edges(self) -> list[tuple[Task, Task]]:
         out = []
+        by_uid = self._task_by_uid
         for u, vs in self.successor_map().items():
-            src = next(t for t in self.tasks if t.uid == u)
+            src = by_uid[u]
             for v in vs:
                 out.append((src, v))
         return out

@@ -107,6 +107,9 @@ class DataHandle:
         with self.lock:
             gen = self.generations[self.cursor]
             gen.done += 1
+            if gen.kind.is_write_like and task.worker_name is not None:
+                # locality hint consumed by WorkStealingScheduler.push
+                self.data.last_writer = task.worker_name
             if gen.done < len(gen.tasks):
                 return newly_ready
             # generation finished → bump data version for write-like gens

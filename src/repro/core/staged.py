@@ -40,7 +40,7 @@ from .task import Task
 def linearize(graph: SpTaskGraph, policy: str = "fifo") -> list[Task]:
     """Total order of ``graph.tasks`` respecting the STF partial order."""
     succ = graph.successor_map()
-    pred = graph.predecessor_counts()
+    pred = graph.predecessor_counts(succ)
     if policy == "critical_path":
         compute_upward_ranks(graph.tasks, succ)
 

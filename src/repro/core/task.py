@@ -71,6 +71,10 @@ class Task:
         self.maybe_written: dict[int, bool] = {}
         # successors cache for dot export (filled lazily by graph)
         self.inserted_index: int = -1
+        # commutative-write handles in sorted-uid order, precomputed at
+        # insert (graph._insert) so the engine hot path takes no per-task
+        # detour through the registry (paper §4.7 runtime mutual exclusion)
+        self.commutative_handles: tuple = ()
 
     # -- readiness bookkeeping --------------------------------------------------
 

@@ -12,6 +12,8 @@ from repro.core import (
     SpTaskGraph,
     SpWorkerTeamBuilder,
     SpWrite,
+    WorkStealingScheduler,
+    trace_metrics,
 )
 from repro.dist.fault import CancelToken, run_duplicated
 
@@ -83,3 +85,101 @@ def test_cancel_token_single_winner():
     tok.set(a)
     tok.set(b)
     assert tok.winner is a
+
+
+def test_engine_keeps_explicit_empty_scheduler():
+    # regression: schedulers define __len__, so an empty one is falsy —
+    # `scheduler or FifoScheduler()` used to silently swap it for FIFO
+    ws = WorkStealingScheduler()
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(1), scheduler=ws)
+    try:
+        assert eng.scheduler is ws
+    finally:
+        eng.stop()
+
+
+def test_locality_routing_end_to_end():
+    """Write-chains: after warmup, successors are pushed to the deque of the
+    worker that produced their input, and get popped locally."""
+    ws = WorkStealingScheduler(locality=True)
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(2), scheduler=ws)
+    try:
+        tg = SpTaskGraph().compute_on(eng)
+        cells = [SpData(0, f"c{i}") for i in range(4)]
+        for step in range(20):
+            for c in cells:
+                tg.task(SpWrite(c), lambda r: None)
+        tg.wait_all_tasks()
+        s = ws.stats()
+        # counters are deliberately lock-free (a lost increment is harmless
+        # for monitoring), so assert a tolerant range, not exact equality
+        assert 70 <= s["pushes"] <= 80, s
+        assert s["locality_hits"] > 0, s
+        assert s["pops_local"] > 0, s
+        # every cell's last writer is one of this engine's workers
+        names = {w.name for w in eng._workers}
+        assert all(c.last_writer in names for c in cells)
+    finally:
+        eng.stop()
+
+
+def test_send_workers_mid_run_keeps_deque_invariants():
+    """Moving workers while a work-stealing graph is executing must not
+    lose tasks: detached workers' deques drain to overflow and everything
+    still completes."""
+    ws = WorkStealingScheduler(locality=True)
+    a = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(3), scheduler=ws, name="a")
+    b = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(1), name="b")
+    try:
+        tg = SpTaskGraph().compute_on(a)
+        cells = [SpData(0, f"c{i}") for i in range(6)]
+        for step in range(30):
+            for c in cells:
+                tg.task(SpWrite(c), lambda r: time.sleep(0.0005))
+            if step == 5:
+                assert a.send_workers_to(b, 2) == 2
+        tg.wait_all_tasks(timeout=30.0)
+        assert len(ws) == 0  # no task left behind in any deque
+        assert all(c.version > 0 for c in cells)
+        deadline = time.time() + 2.0
+        while time.time() < deadline and (a.n_workers, b.n_workers) != (1, 3):
+            time.sleep(0.01)
+        assert (a.n_workers, b.n_workers) == (1, 3)
+    finally:
+        a.stop()
+        b.stop()
+
+
+def test_trace_opt_out_records_nothing():
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(2))
+    try:
+        tg = SpTaskGraph(trace=False).compute_on(eng)
+        x = SpData(0, "x")
+        for _ in range(10):
+            tg.task(SpWrite(x), lambda r: None)
+        tg.wait_all_tasks()
+        assert tg.trace_events == []
+        assert trace_metrics(tg) == {"n_tasks": 0}
+
+        # default stays opt-out-able: trace=True records and metrics work
+        tg2 = SpTaskGraph(trace=True).compute_on(eng)
+        for _ in range(10):
+            tg2.task(SpWrite(x), lambda r: None)
+        tg2.wait_all_tasks()
+        assert len(tg2.trace_events) == 10
+        m = trace_metrics(tg2)
+        assert m["n_tasks"] == 10 and m["utilization"] > 0
+    finally:
+        eng.stop()
+
+
+def test_commutative_handles_precomputed_at_insert():
+    from repro.core import SpCommutativeWrite
+
+    tg = SpTaskGraph()
+    a, b = SpData(0, "a"), SpData(0, "b")
+    v = tg.task(SpCommutativeWrite(b), SpCommutativeWrite(a), lambda rb, ra: None)
+    uids = [h.data.uid for h in v.task.commutative_handles]
+    assert uids == sorted(uids) and len(uids) == 2
+    v2 = tg.task(SpRead(a), lambda x: None)
+    assert v2.task.commutative_handles == ()

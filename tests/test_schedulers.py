@@ -60,6 +60,107 @@ def test_work_stealing():
     assert sorted(got) == ["t0", "t1", "t2", "t3"]
 
 
+def _hinted_task(name, last_writer):
+    t = _mk_task(name)
+    t.accesses[0].data.last_writer = last_writer
+    return t
+
+
+def test_locality_push_lands_on_last_writer_deque():
+    ws = WorkStealingScheduler(locality=True)
+    ws.register_worker("wa")
+    ws.register_worker("wb")
+    owner = ws.push(_hinted_task("t0", "wb"))
+    assert owner == "wb"
+    assert ws.stats()["locality_hits"] == 1
+    # wb pops its own deque — a local hit, not a steal
+    t = ws.pop(worker_name="wb")
+    assert t is not None and t.name == "t0"
+    s = ws.stats()
+    assert s["pops_local"] == 1 and s["steals"] == 0
+    # a hint naming an unregistered worker falls back (no crash, no hit)
+    owner = ws.push(_hinted_task("t1", "nonexistent-worker"))
+    assert owner in ("wa", "wb")
+    assert ws.stats()["locality_hits"] == 1
+
+
+def test_dominant_input_wins_locality_vote():
+    ws = WorkStealingScheduler(locality=True)
+    ws.register_worker("wa")
+    ws.register_worker("wb")
+    xs = [SpData(0, f"x{i}") for i in range(3)]
+    xs[0].last_writer = "wa"
+    xs[1].last_writer = "wb"
+    xs[2].last_writer = "wb"
+    accs = [SpAccess(x, AccessMode.READ) for x in xs]
+    t = Task({"ref": lambda *a: None}, accs, [("single", a) for a in accs], name="multi")
+    assert ws.push(t) == "wb"
+
+
+def test_steal_counters_increment():
+    ws = WorkStealingScheduler(locality=False)
+    ws.register_worker("wa")
+    ws.register_worker("wb")
+    for i in range(4):
+        ws.push(_mk_task(f"t{i}"))
+    # wc is not an owner of any deque → every pop is a steal
+    ws.register_worker("wc")
+    got = 0
+    while ws.pop(worker_name="wc") is not None:
+        got += 1
+    assert got == 4
+    s = ws.stats()
+    assert s["steals"] == 4 and s["pops_local"] == 0
+    assert s["failed_pops"] >= 1  # the final empty pop
+    assert s["steal_rate"] == 1.0
+
+
+def test_overflow_preferred_over_stealing():
+    ws = WorkStealingScheduler(locality=False)
+    ws.push(_mk_task("orphan"))  # no workers registered yet → overflow deque
+    ws.register_worker("wa")
+    ws.register_worker("wb")
+    ws.push(_mk_task("r0"))
+    ws.push(_mk_task("r1"))
+    # wa/wb own deques hold r0/r1; a popper whose own deque is empty must
+    # return the overflow task before stealing from a random victim
+    popped = []
+    for _ in range(3):
+        t = ws.pop(worker_name="wc-idle")
+        assert t is not None
+        popped.append(t.name)
+    assert popped[0] == "orphan"
+    assert ws.stats()["pops_overflow"] == 1
+
+
+def test_unregister_drains_to_overflow_and_gets_popped():
+    ws = WorkStealingScheduler(locality=False)
+    ws.register_worker("wa")
+    ws.register_worker("wb")
+    for i in range(4):
+        ws.push(_mk_task(f"t{i}"))
+    n_wa = len(ws._deques["wa"].q)
+    ws.unregister_worker("wa")
+    assert "wa" not in ws._deques
+    # nothing lost: all 4 still poppable by the surviving worker
+    names = []
+    while True:
+        t = ws.pop(worker_name="wb")
+        if t is None:
+            break
+        names.append(t.name)
+    assert sorted(names) == ["t0", "t1", "t2", "t3"]
+    if n_wa:
+        assert ws.stats()["pops_overflow"] == n_wa
+
+
+def test_priority_len_is_thread_safe_under_lock():
+    p = PriorityScheduler()
+    assert len(p) == 0
+    p.push(_mk_task("t", prio=3))
+    assert len(p) == 1
+
+
 def test_make_scheduler_registry():
     for name in ("fifo", "lifo", "priority", "critical_path", "work_stealing"):
         assert make_scheduler(name) is not None
