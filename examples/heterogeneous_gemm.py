@@ -1,6 +1,6 @@
-"""Heterogeneous blocked GEMM (paper §4.3 + Fig. 2): per-task implementation
-variants — SpRef (XLA) and SpPallas (TPU kernel; interpret-mode here) — with
-the scheduler free to pick per worker kind.  Exports graph + trace.
+"""Heterogeneous blocked GEMM (paper §4.3 + Fig. 2): one codelet, two
+implementation variants — ref (XLA) and pallas (TPU kernel; stand-in here) —
+with the scheduler free to pick per worker kind.  Exports graph + trace.
 
     PYTHONPATH=src python examples/heterogeneous_gemm.py
 """
@@ -11,16 +11,21 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (
-    SpCommutativeWrite,
-    SpComputeEngine,
-    SpData,
-    SpPallas,
-    SpRead,
-    SpRef,
-    SpTaskGraph,
-    SpWorkerTeamBuilder,
-)
+from repro.core import SpData, SpRuntime, SpWorkerTeamBuilder, sp_task
+
+xla_mm = jax.jit(lambda x, y, z: z + x @ y)
+
+
+@sp_task(read=("a", "b"), commutative=("c",), name="gemm")
+def gemm_block(a, b, c):
+    c.value = xla_mm(a, b, c.value)
+
+
+@gemm_block.impl("pallas")
+def _gemm_block_pallas(a, b, c):
+    # stand-in for a Pallas matmul kernel: on this CPU container the
+    # point is the per-kind dispatch, so reuse the XLA path
+    c.value = xla_mm(a, b, c.value)
 
 
 def main(n: int = 256, block: int = 64) -> None:
@@ -33,38 +38,25 @@ def main(n: int = 256, block: int = 64) -> None:
     b = [[SpData(B[k * block:(k + 1) * block, j * block:(j + 1) * block]) for j in range(nb)] for k in range(nb)]
     c = [[SpData(jnp.zeros((block, block))) for _ in range(nb)] for _ in range(nb)]
 
-    xla_mm = jax.jit(lambda x, y, z: z + x @ y)
-
-    def ref_body(x, y, zref):
-        zref.value = xla_mm(x, y, zref.value)
-
-    def pallas_body(x, y, zref):
-        # stand-in for a Pallas matmul kernel: on this CPU container the
-        # point is the per-kind dispatch, so reuse the XLA path
-        zref.value = xla_mm(x, y, zref.value)
-
     # a mixed team: 3 "CPU" (ref) workers + 1 "device" (pallas) worker
-    ce = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_cuda_workers(3, 1))
-    tg = SpTaskGraph().compute_on(ce)
+    team = SpWorkerTeamBuilder.team_of_cpu_cuda_workers(3, 1)
     t0 = time.perf_counter()
-    for i in range(nb):
-        for j in range(nb):
-            for k in range(nb):
-                tg.task(
-                    SpRead(a[i][k]), SpRead(b[k][j]), SpCommutativeWrite(c[i][j]),
-                    SpRef(ref_body), SpPallas(pallas_body),
-                    name=f"gemm[{i},{j},{k}]",
-                ).set_task_name(f"C{i}{j}+=A{i}{k}B{k}{j}")
-    tg.wait_all_tasks()
-    wall = time.perf_counter() - t0
+    with SpRuntime(backend="eager", workers=team) as rt:
+        for i in range(nb):
+            for j in range(nb):
+                for k in range(nb):
+                    gemm_block(
+                        a[i][k], b[k][j], c[i][j], name=f"gemm[{i},{j},{k}]"
+                    ).set_task_name(f"C{i}{j}+=A{i}{k}B{k}{j}")
+        rt.wait_all_tasks()
+        wall = time.perf_counter() - t0
 
-    C = jnp.block([[c[i][j].value for j in range(nb)] for i in range(nb)])
-    err = float(jnp.abs(C - A @ B).max())
-    print(f"[gemm] {nb ** 3} tasks in {wall * 1e3:.0f}ms, max err {err:.2e}")
-    tg.generate_dot("/tmp/hetero_gemm.dot")
-    tg.generate_trace("/tmp/hetero_gemm_trace.svg")
-    print("[gemm] exported /tmp/hetero_gemm.dot, /tmp/hetero_gemm_trace.svg")
-    ce.stop()
+        C = jnp.block([[c[i][j].value for j in range(nb)] for i in range(nb)])
+        err = float(jnp.abs(C - A @ B).max())
+        print(f"[gemm] {nb ** 3} tasks in {wall * 1e3:.0f}ms, max err {err:.2e}")
+        rt.graph.generate_dot("/tmp/hetero_gemm.dot")
+        rt.graph.generate_trace("/tmp/hetero_gemm_trace.svg")
+        print("[gemm] exported /tmp/hetero_gemm.dot, /tmp/hetero_gemm_trace.svg")
     assert err < 1e-3
 
 

@@ -1,8 +1,9 @@
-"""Quickstart — the Specx-JAX task-graph API in five minutes.
+"""Quickstart — the Specx-JAX codelet API in five minutes.
 
-Mirrors the paper's Codes 1–5: create a graph + compute engine, insert
-tasks with data-access declarations, use commutative writes, array views,
-priorities, a speculative maybe-write, and export the DOT/trace artifacts.
+A task is *declared once* with its access modes (paper §4.1) and can carry
+several implementations (SpCpu/SpCuda, §4.3); the runtime picks per call.
+One ``SpRuntime`` runs the same declarations threaded-eager or
+compiled-staged by flipping ``backend=``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,82 +12,115 @@ import time
 import jax.numpy as jnp
 
 from repro.core import (
-    SpCommutativeWrite,
-    SpComputeEngine,
     SpData,
-    SpMaybeWrite,
-    SpPriority,
     SpRead,
-    SpReadArray,
+    SpRuntime,
     SpSpeculativeModel,
-    SpTaskGraph,
-    SpWorkerTeamBuilder,
     SpWrite,
+    sp_task,
 )
+from repro.kernels.dispatch import pallas_available
+
+
+# --- declare tasks once: named slots + access modes -------------------------
+
+@sp_task(read=("a",), write=("b",))
+def axpy(a, b, *, alpha=2.0):
+    """b += alpha * a; `alpha` is a static parameter bound per call."""
+    b.value = b.value + alpha * a
+
+
+@sp_task(commutative=("acc",))
+def accumulate(acc, *, inc):
+    acc.value = acc.value + inc
+
+
+@sp_task(read=("cells",))
+def total(cells):
+    """`cells` is an ARRAY slot: bind a list of SpData (paper Code 3)."""
+    return sum(cells)
+
+
+# annotation spelling: parameter types name the access mode
+@sp_task
+def scale100(state: SpRead, out: SpWrite):
+    time.sleep(0.02)
+    out.value = state * 100
+
+
+@sp_task(maybe=("state",))
+def maybe_update(state):  # uncertain writer — does NOT write this time
+    time.sleep(0.02)
+
+
+# capability-dispatched variants: the pallas impl only runs where available
+@sp_task(read=("x",), write=("y",))
+def double(x, y):
+    y.value = 2.0 * x
+
+
+@double.impl("pallas", available=pallas_available)
+def _double_pallas(x, y):
+    y.value = 2.0 * x  # stand-in for a Pallas kernel on this CPU container
 
 
 def main() -> None:
-    # --- Code 1/5: a task graph + a compute engine -------------------------
-    ce = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(4))
-    tg = SpTaskGraph()
-    tg.compute_on(ce)
+    # --- eager backend: a worker-thread engine drives the graph ------------
+    with SpRuntime(backend="eager", workers=4) as rt:
+        a = SpData(jnp.arange(4.0), "a")
+        b = SpData(jnp.zeros(4), "b")
+        view = axpy(a, b, alpha=2.0)
+        view.set_task_name("axpy")
+        print("b =", view.then(lambda _: b.value).result())  # future chaining
 
-    # --- Code 2: a task reading `a`, writing `b` ---------------------------
-    a = SpData(jnp.arange(4.0), "a")
-    b = SpData(jnp.zeros(4), "b")
-    view = tg.task(
-        SpPriority(1),
-        SpRead(a),
-        SpWrite(b),
-        lambda av, bref: setattr(bref, "value", bref.value + 2 * av),
-    )
-    view.set_task_name("axpy")
-    view.wait()
-    print("b =", b.value)
+        acc = SpData(jnp.zeros(()), "acc")
+        for i in range(8):
+            accumulate(acc, inc=i, name=f"accum{i}")
+        rt.wait_all_tasks()
+        print("acc =", acc.value, "(order-free accumulation of 0..7)")
 
-    # --- commutative gradient-style accumulation ---------------------------
-    acc = SpData(jnp.zeros(()), "acc")
-    for i in range(8):
-        tg.task(
-            SpCommutativeWrite(acc),
-            lambda r, i=i: setattr(r, "value", r.value + i),
-            name=f"accum{i}",
+        cells = [SpData(float(i), f"c{i}") for i in range(6)]
+        print("sum of cells [1,3,5] =", total([cells[i] for i in (1, 3, 5)]).result())
+
+        x, y = SpData(jnp.float32(21.0), "x"), SpData(None, "y")
+        v = double(x, y)
+        print("double =", v.then(lambda _: y.value).result(),
+              "| impls:", double.impl_kinds, "available:", double.available_kinds())
+
+        graph = rt.graph  # exports (paper Code 8)
+        graph.generate_dot("/tmp/quickstart_graph.dot")
+        graph.generate_trace("/tmp/quickstart_trace.svg")
+        print("exported /tmp/quickstart_graph.dot and /tmp/quickstart_trace.svg")
+
+    # --- same codelet, staged backend: one linearized, jit-able program ----
+    with SpRuntime(backend="staged", policy="fifo") as rts:
+        a2 = SpData(jnp.arange(4.0), "a")
+        b2 = SpData(jnp.zeros(4), "b")
+        v2 = axpy(a2, b2, alpha=2.0)
+        print("staged b =", v2.then(lambda _: b2.value).result(),
+              "(identical to eager)")
+
+    # --- speculation: run past an uncertain writer (decorator path) --------
+    with SpRuntime(
+        backend="eager", workers=4, speculative_model=SpSpeculativeModel.SP_MODEL_1
+    ) as rtspec:
+        state, out = SpData(1.0, "state"), SpData(0.0, "out")
+        t0 = time.perf_counter()
+        maybe_update(state, name="update")
+        scale100(state, out, name="eval")
+        rtspec.wait_all_tasks()
+        print(
+            f"speculative eval: out={out.value} in "
+            f"{(time.perf_counter() - t0) * 1e3:.0f}ms (~20ms thanks to overlap), "
+            f"stats={rtspec.graph.spec_stats}"
         )
-    tg.wait_all_tasks()
-    print("acc =", acc.value, "(order-free accumulation of 0..7)")
 
-    # --- Code 3: dependencies on a SUBSET of objects -----------------------
-    cells = [SpData(float(i), f"c{i}") for i in range(6)]
-    total = tg.task(SpReadArray(cells, [1, 3, 5]), lambda vals: sum(vals))
-    print("sum of cells [1,3,5] =", total.get_value())
-
-    # --- speculation: run past an uncertain writer -------------------------
-    tgs = SpTaskGraph(SpSpeculativeModel.SP_MODEL_1)
-    tgs.compute_on(ce)
-    state = SpData(1.0, "state")
-    out = SpData(0.0, "out")
-
-    def maybe_update(ref):  # does NOT write this time
-        time.sleep(0.02)
-
-    def heavy_eval(sv, oref):
-        time.sleep(0.02)
-        oref.value = sv * 100
-
-    t0 = time.perf_counter()
-    tgs.task(SpMaybeWrite(state), maybe_update, name="update")
-    tgs.task(SpRead(state), SpWrite(out), heavy_eval, name="eval")
-    tgs.wait_all_tasks()
-    print(
-        f"speculative eval: out={out.value} in {(time.perf_counter() - t0) * 1e3:.0f}ms "
-        f"(~20ms thanks to overlap), stats={tgs.spec_stats}"
-    )
-
-    # --- Code 8: export the graph + execution trace ------------------------
-    tg.generate_dot("/tmp/quickstart_graph.dot")
-    tg.generate_trace("/tmp/quickstart_trace.svg")
-    print("exported /tmp/quickstart_graph.dot and /tmp/quickstart_trace.svg")
-    ce.stop()
+    # --- compatibility form: the positional paper spelling still works -----
+    with SpRuntime(backend="eager", workers=2) as rtc:
+        c, d = SpData(3.0, "c"), SpData(0.0, "d")
+        rtc.task(SpRead(c), SpWrite(d), lambda cv, dref: setattr(dref, "value", cv + 1))
+        rtc.wait_all_tasks()
+        print("compat tg.task spelling: d =", d.value)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,37 @@
 """repro.core — Specx's task-based runtime, adapted to JAX (DESIGN.md §1–2).
 
-Public API mirrors the paper's spelling where sensible::
+The **codelet frontend** (``api.py``) is the primary spelling: declare a
+task once — its named data slots with access modes, plus one implementation
+per processing-unit kind — then run the same declaration on either backend::
+
+    from repro.core import SpData, SpRuntime, sp_task
+
+    @sp_task(read=("a",), write=("b",))
+    def axpy(a, b, *, alpha=2.0):
+        b.value = b.value + alpha * a
+
+    @axpy.impl("pallas", available=lambda: on_tpu())   # SpCpu/SpCuda, §4.3
+    def _(a, b, *, alpha=2.0): ...
+
+    a, b = SpData(x, "a"), SpData(y, "b")
+    with SpRuntime(backend="eager", workers=4) as rt:  # or backend="staged"
+        view = axpy(a, b, alpha=3.0)
+        print(view.result())                            # future-like TaskView
+
+Capability dispatch happens per call: variants whose ``available()`` probe
+fails are excluded; the eager engine then selects by worker kind, the staged
+backend by platform.
+
+The positional paper spelling remains as the compatibility form::
+
+    tg = SpTaskGraph()
+    tg.task(SpRead(a), SpWrite(b), fn)     # same insertion path underneath
+
+Public API (paper spellings where sensible)::
 
     from repro.core import (
-        SpTaskGraph, SpSpeculativeModel, SpRuntime,
+        sp_task, SpCodelet, SpRuntime, graph_scope, current_graph,
+        SpTaskGraph, SpSpeculativeModel,
         SpData, SpRead, SpWrite, SpCommutativeWrite, SpMaybeWrite, SpAtomicWrite,
         SpReadArray, SpWriteArray, SpPriority,
         SpComputeEngine, SpWorkerTeamBuilder,
@@ -45,7 +73,8 @@ from .comm import (
     mpi_send,
 )
 from .engine import SpComputeEngine, SpWorker, SpWorkerTeam, SpWorkerTeamBuilder
-from .graph import SpRuntime, SpSpeculativeModel, SpTaskGraph
+from .graph import SpSpeculativeModel, SpTaskGraph
+from .api import SpCodelet, SpRuntime, SpSlot, current_graph, graph_scope, sp_task
 from .scheduler import (
     CriticalPathScheduler,
     FifoScheduler,
@@ -68,7 +97,8 @@ __all__ = [
     "SpWriteRef", "ChannelHub", "SpCommGroup", "SpDeserializer", "SpSerializer",
     "mpi_broadcast", "mpi_recv", "mpi_send", "SpComputeEngine", "SpWorker",
     "SpWorkerTeam", "SpWorkerTeamBuilder", "SpRuntime", "SpSpeculativeModel",
-    "SpTaskGraph", "CriticalPathScheduler", "FifoScheduler", "LifoScheduler",
+    "SpTaskGraph", "SpCodelet", "SpSlot", "sp_task", "graph_scope", "current_graph",
+    "CriticalPathScheduler", "FifoScheduler", "LifoScheduler",
     "PriorityScheduler", "SpAbstractScheduler", "WorkStealingScheduler",
     "compute_upward_ranks", "make_scheduler", "execute_staged", "linearize",
     "schedule_summary", "trace_metrics", "Task", "TaskState", "TaskView",

@@ -69,6 +69,9 @@ class SpTaskGraph:
         self.trace = trace
         self.trace_events: list[dict] = []
         self.spec_stats = {"speculated": 0, "commits": 0, "rollbacks": 0}
+        # set by a staged SpRuntime (core/api.py): zero-arg callable that
+        # executes the pending graph; TaskView.result() triggers it
+        self._flush_hook = None
 
     # ------------------------------------------------------------------ insert
 
@@ -88,6 +91,10 @@ class SpTaskGraph:
         to the background comm thread only when it carries a ``comm_start``
         (see comm.py); in the staged backend the flag steers the ``overlap``
         linearization policy (collectives issued as early as possible).
+
+        This positional spelling is the compatibility form; the declarative
+        codelet frontend (``repro.core.api``) inserts through the same
+        :meth:`insert_task` path.
         """
         prio = priority
         accesses: list[SpAccess] = []
@@ -107,18 +114,36 @@ class SpTaskGraph:
             else:
                 raise TypeError(f"unsupported task() argument: {a!r}")
         impls = normalize_impls(impl_raw)
+        return self.insert_task(
+            impls, accesses, arg_layout, priority=prio, name=name, cost=cost, comm=comm
+        )
+
+    def insert_task(
+        self,
+        impls: dict,
+        accesses: Sequence[SpAccess],
+        arg_layout: Sequence[tuple[str, Any]],
+        *,
+        priority: int = 0,
+        name: str | None = None,
+        cost: float = 1.0,
+        comm: bool = False,
+    ) -> TaskView:
+        """Insert a fully-resolved task (impl dict + accesses + argument
+        layout).  Shared lower half of :meth:`task` and the codelet frontend
+        — runs the speculation pass, then wires dependencies."""
         self._check_duplicate_handles(accesses)
 
         if self.spec_model is not SpSpeculativeModel.SP_NO_SPEC:
             from .speculation import maybe_speculative_insert
 
             view = maybe_speculative_insert(
-                self, impls, accesses, arg_layout, prio, name, cost
+                self, impls, list(accesses), list(arg_layout), priority, name, cost
             )
             if view is not None:
                 return view
 
-        task = Task(impls, accesses, arg_layout, prio, name, cost=cost, is_comm=comm)
+        task = Task(impls, accesses, arg_layout, priority, name, cost=cost, is_comm=comm)
         return self._insert(task)
 
     def _check_duplicate_handles(self, accesses: Sequence[SpAccess]) -> None:
@@ -283,22 +308,6 @@ class SpTaskGraph:
     generateTrace = generate_trace
 
 
-class SpRuntime:
-    """Legacy façade (paper Code 1): a compute engine + a task graph."""
-
-    def __init__(self, n_threads: int | None = None):
-        from .engine import SpComputeEngine, SpWorkerTeamBuilder
-
-        n = n_threads or SpWorkerTeamBuilder.default_num_threads()
-        self.engine = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(n))
-        self.graph = SpTaskGraph()
-        self.graph.compute_on(self.engine)
-
-    def task(self, *args, **kw) -> TaskView:
-        return self.graph.task(*args, **kw)
-
-    def wait_all_tasks(self) -> None:
-        self.graph.wait_all_tasks()
-
-    def stop(self) -> None:
-        self.engine.stop()
+# NB: SpRuntime (paper Code 1) lives in ``core/api.py`` — the unified
+# eager/staged façade grew out of the legacy engine+graph pair that used to
+# be defined here.  ``SpRuntime(n)`` still spells the old behaviour.

@@ -34,7 +34,7 @@ from typing import Callable
 
 from .graph import SpTaskGraph
 from .scheduler import compute_upward_ranks
-from .task import Task
+from .task import Task, TaskState
 
 
 def linearize(graph: SpTaskGraph, policy: str = "fifo") -> list[Task]:
@@ -81,6 +81,41 @@ def linearize(graph: SpTaskGraph, policy: str = "fifo") -> list[Task]:
     return order
 
 
+def run_schedule(
+    graph: SpTaskGraph,
+    order: list[Task],
+    impl_for: Callable[[Task], str],
+) -> BaseException | None:
+    """Run ``order`` sequentially with full graph bookkeeping.
+
+    The single staged executor under both :func:`execute_staged` and
+    ``SpRuntime._flush``: each task is run with ``impl_for(task)`` as the
+    preferred implementation kind, its handles released and its done event
+    set, so ``wait_all_tasks`` / ``TaskView`` work afterwards.  On the first
+    exception the remaining not-yet-run tasks are marked *cancelled*
+    (``TaskView.result()`` on them raises ``CancelledError``) and the error
+    is returned — the caller decides whether to raise now (functional API)
+    or defer to ``result()``/``wait_all_tasks`` (runtime API).
+    """
+    error: BaseException | None = None
+    for t in order:
+        if t.is_done:
+            continue
+        if error is not None:
+            t.mark_cancelled()
+            graph.on_task_finished(t)
+            continue
+        t.state = TaskState.RUNNING
+        try:
+            t.run(preferred_impl=impl_for(t))
+        except BaseException as e:
+            t.exception = e
+            error = e
+        graph.on_task_finished(t)
+        t.mark_finished()
+    return error
+
+
 def execute_staged(
     graph: SpTaskGraph, policy: str = "fifo", impl: str = "ref"
 ) -> list[Task]:
@@ -88,11 +123,13 @@ def execute_staged(
 
     Safe under ``jax.jit`` tracing when all task bodies are trace-pure
     (jnp-only).  Cell values after the call hold the outputs (tracers when
-    traced).  Returns the schedule for introspection.
+    traced).  Returns the schedule for introspection.  The first task
+    exception propagates immediately (remaining tasks are cancelled).
     """
     order = linearize(graph, policy)
-    for t in order:
-        t.run(preferred_impl=impl)
+    error = run_schedule(graph, order, lambda t: impl)
+    if error is not None:
+        raise error
     return order
 
 

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+from concurrent.futures import CancelledError
 from typing import Any, Callable, Optional, Sequence
 
 from .access import AccessMode, SpAccess, SpImpl, SpWriteRef
@@ -75,6 +76,11 @@ class Task:
         # insert (graph._insert) so the engine hot path takes no per-task
         # detour through the registry (paper §4.7 runtime mutual exclusion)
         self.commutative_handles: tuple = ()
+        # codelet-frontend metadata (core/api.py): the hidden cell holding
+        # the body's return value (enables TaskView.then chaining) and the
+        # platform-preferred impl kind resolved at bind time
+        self.result_cell = None
+        self.preferred_kind: str | None = None
 
     # -- readiness bookkeeping --------------------------------------------------
 
@@ -98,8 +104,10 @@ class Task:
             return self.impls[preferred]
         if "ref" in self.impls:
             return self.impls["ref"]
-        # any impl
-        return next(iter(self.impls.values()))
+        raise KeyError(
+            f"task {self.name!r} has no {preferred!r} implementation and no "
+            f"'ref' fallback; registered kinds: {sorted(self.impls)}"
+        )
 
     def build_args(self) -> tuple[list, list[tuple[SpAccess, SpWriteRef]]]:
         """Materialize callable arguments.  Returns (args, writebacks)."""
@@ -162,11 +170,15 @@ class Task:
 
 
 class TaskView:
-    """User-facing viewer (paper §4.1 "Task Viewer").
+    """User-facing viewer (paper §4.1 "Task Viewer") with a future-like API.
 
     Allows naming the task, waiting for completion and fetching the produced
-    value.  The paper notes the pitfall that names may be set after execution
-    — unchanged here, and equally harmless.
+    value (``get_value`` — paper spelling — or the concurrent.futures-style
+    :meth:`result` / :meth:`done` / :meth:`exception`), and chaining
+    follow-up work with :meth:`then`.  On a staged runtime, asking for the
+    result forces the pending graph to execute (the graph's flush hook).
+    The paper notes the pitfall that names may be set after execution —
+    unchanged here, and equally harmless.
     """
 
     __slots__ = ("_task",)
@@ -195,6 +207,89 @@ class TaskView:
         return self._task.result
 
     getValue = get_value
+
+    # -- future-like API (codelet frontend, core/api.py) ---------------------
+
+    def _maybe_flush(self) -> None:
+        """On a staged runtime the graph only executes when flushed; asking
+        for a result is such a trigger (SpRuntime installs the hook)."""
+        if self._task.is_done:
+            return
+        hook = getattr(getattr(self._task, "graph", None), "_flush_hook", None)
+        if hook is not None:
+            hook()
+
+    def done(self) -> bool:
+        return self._task.is_done
+
+    def result(self, timeout: float | None = None) -> Any:
+        """Block until done; raise the task's exception (or CancelledError —
+        concurrent.futures semantics) or return its value."""
+        self._maybe_flush()
+        if not self._task.wait(timeout):
+            raise TimeoutError(f"task {self._task.name!r} still pending")
+        if self._task.exception is not None:
+            self._mark_error_observed()
+            raise self._task.exception
+        if self._task.state == TaskState.CANCELLED:
+            raise CancelledError(f"task {self._task.name!r} was cancelled")
+        return self._task.result
+
+    def exception(self, timeout: float | None = None) -> BaseException | None:
+        self._maybe_flush()
+        if not self._task.wait(timeout):
+            raise TimeoutError(f"task {self._task.name!r} still pending")
+        if self._task.exception is not None:
+            self._mark_error_observed()
+            return self._task.exception
+        if self._task.state == TaskState.CANCELLED:
+            raise CancelledError(f"task {self._task.name!r} was cancelled")
+        return None
+
+    def _mark_error_observed(self) -> None:
+        """An exception delivered through the future API counts as handled:
+        drop it from the graph's error list so wait_all_tasks / scope exit
+        does not re-raise what the caller already saw."""
+        graph = getattr(self._task, "graph", None)
+        if graph is not None:
+            try:
+                graph.errors.remove(self._task.exception)
+            except ValueError:
+                pass
+
+    def then(self, fn, *, name: str | None = None, cost: float = 1.0) -> "TaskView":
+        """Chain ``fn`` over this task's result: inserts a follow-up task
+        reading the hidden result cell (so the dependency is ordinary data
+        flow, honored by both backends) and returns its view."""
+        task = self._task
+        cell = getattr(task, "result_cell", None)
+        graph = getattr(task, "graph", None)
+        if cell is None or graph is None:
+            raise RuntimeError(
+                "then() requires a task inserted through the codelet frontend "
+                "(sp_task / SpCodelet), which records a result cell"
+            )
+        from .access import AccessMode, SpAccess, SpData
+
+        nm = name or f"{task.name}.then"
+        out = SpData(None, f"{nm}.result")
+        in_acc = SpAccess(cell, AccessMode.READ)
+        out_acc = SpAccess(out, AccessMode.WRITE)
+
+        def body(v, res_ref):
+            r = fn(v)
+            res_ref.value = r
+            return r
+
+        view = graph.insert_task(
+            {"ref": body},
+            [in_acc, out_acc],
+            [("single", in_acc), ("single", out_acc)],
+            name=nm,
+            cost=cost,
+        )
+        view.task.result_cell = out
+        return view
 
     @property
     def state(self) -> str:

@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.access import SpData, SpRead, SpWrite
+from repro.core.access import SpData
+from repro.core.api import sp_task
 from repro.core.comm import SpCommGroup, mpi_recv, mpi_send
 from repro.core.graph import SpTaskGraph
 from repro.core.task import TaskView
@@ -38,7 +39,47 @@ from repro.core.task import TaskView
 
 # ---------------------------------------------------------------------------
 # Ring collectives over the ChannelHub (eager task-graph substrate).
+# The chunk-level steps are codelets — declared once here, instantiated per
+# rank/step with per-call names (the codelet frontend, core/api.py).
 # ---------------------------------------------------------------------------
+
+@sp_task(read=("x",), write=("chunks",), name="ring.split")
+def _ring_split(x, chunks, *, n, meta):
+    """Scatter ``x`` into ``n`` flat chunks; stash shape/dtype in ``meta``."""
+    a = np.asarray(x)
+    meta["shape"], meta["dtype"] = a.shape, a.dtype
+    for ref, piece in zip(chunks, np.array_split(a.reshape(-1), n)):
+        ref.value = piece.copy()
+
+
+@sp_task(read=("incoming",), write=("acc",), name="ring.acc")
+def _ring_accumulate(incoming, acc):
+    acc.value = acc.value + incoming
+
+
+@sp_task(read=("chunks",), write=("x",), name="ring.concat")
+def _ring_concat(chunks, x, *, n, op, meta):
+    full = np.concatenate([np.asarray(v).reshape(-1) for v in chunks])
+    if op == "mean":
+        full = full / n
+    x.value = full.astype(meta["dtype"]).reshape(meta["shape"])
+    return x.value
+
+
+@sp_task(read=("x",), write=("slot",), name="ring.seed")
+def _ring_seed(x, slot):
+    slot.value = x
+
+
+@sp_task(read=("slots",), name="ring.collect")
+def _ring_collect(slots):
+    return list(slots)
+
+
+@sp_task(read=("x",), name="ring.identity")
+def _ring_identity(x, *, wrap=False):
+    return [x] if wrap else x
+
 
 def ring_all_reduce(
     graph: SpTaskGraph,
@@ -59,20 +100,13 @@ def ring_all_reduce(
         raise ValueError(f"unsupported op {op!r}; use 'sum' or 'mean'")
     S, r = group.size, group.rank
     if S == 1:
-        return graph.task(SpRead(x), lambda v: v, name=f"allreduce{tag}.id")
+        return _ring_identity(x, graph=graph, name=f"allreduce{tag}.id")
     right, left = (r + 1) % S, (r - 1) % S
     chunks = [SpData(None, f"ar{tag}.r{r}.c{i}") for i in range(S)]
     meta: dict = {}
 
-    def split(v, *refs):
-        a = np.asarray(v)
-        meta["shape"], meta["dtype"] = a.shape, a.dtype
-        for ref, piece in zip(refs, np.array_split(a.reshape(-1), S)):
-            ref.value = piece.copy()
-        return None
-
-    graph.task(SpRead(x), *[SpWrite(c) for c in chunks], split,
-               name=f"allreduce{tag}.split")
+    _ring_split(x, chunks, n=S, meta=meta,
+                graph=graph, name=f"allreduce{tag}.split")
 
     # reduce-scatter: after S-1 steps rank r owns the reduced chunk (r+1)%S
     for step in range(S - 1):
@@ -82,11 +116,8 @@ def ring_all_reduce(
                  tag=("rar", tag, "rs", step))
         tmp = SpData(None, f"ar{tag}.r{r}.rs{step}")
         mpi_recv(graph, group, tmp, src=left, tag=("rar", tag, "rs", step))
-        graph.task(
-            SpRead(tmp), SpWrite(chunks[recv_idx]),
-            lambda v, ref: setattr(ref, "value", ref.value + v),
-            name=f"allreduce{tag}.acc{step}",
-        )
+        _ring_accumulate(tmp, chunks[recv_idx],
+                         graph=graph, name=f"allreduce{tag}.acc{step}")
 
     # all-gather: circulate the reduced chunks
     for step in range(S - 1):
@@ -97,16 +128,8 @@ def ring_all_reduce(
         mpi_recv(graph, group, chunks[recv_idx], src=left,
                  tag=("rar", tag, "ag", step))
 
-    def concat(*args):
-        *vals, ref = args
-        full = np.concatenate([np.asarray(v).reshape(-1) for v in vals])
-        if op == "mean":
-            full = full / S
-        ref.value = full.astype(meta["dtype"]).reshape(meta["shape"])
-        return ref.value
-
-    return graph.task(*[SpRead(c) for c in chunks], SpWrite(x), concat,
-                      name=f"allreduce{tag}.concat")
+    return _ring_concat(chunks, x, n=S, op=op, meta=meta,
+                        graph=graph, name=f"allreduce{tag}.concat")
 
 
 def ring_all_gather(
@@ -120,12 +143,10 @@ def ring_all_gather(
     rank's ``x.value``, ordered by rank (same list on all ranks)."""
     S, r = group.size, group.rank
     if S == 1:
-        return graph.task(SpRead(x), lambda v: [v], name=f"allgather{tag}.id")
+        return _ring_identity(x, wrap=True, graph=graph, name=f"allgather{tag}.id")
     right, left = (r + 1) % S, (r - 1) % S
     slots = [SpData(None, f"ag{tag}.r{r}.s{i}") for i in range(S)]
-    graph.task(SpRead(x), SpWrite(slots[r]),
-               lambda v, ref: setattr(ref, "value", v),
-               name=f"allgather{tag}.seed")
+    _ring_seed(x, slots[r], graph=graph, name=f"allgather{tag}.seed")
     for step in range(S - 1):
         send_idx = (r - step) % S
         recv_idx = (r - step - 1) % S
@@ -133,8 +154,7 @@ def ring_all_gather(
                  tag=("rag", tag, step))
         mpi_recv(graph, group, slots[recv_idx], src=left,
                  tag=("rag", tag, step))
-    return graph.task(*[SpRead(s) for s in slots], lambda *vals: list(vals),
-                      name=f"allgather{tag}.collect")
+    return _ring_collect(slots, graph=graph, name=f"allgather{tag}.collect")
 
 
 # ---------------------------------------------------------------------------

@@ -27,7 +27,8 @@ import threading
 from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
-from repro.core.access import SpCommutativeWrite, SpData, SpRead
+from repro.core.access import SpData
+from repro.core.api import sp_task
 from repro.core.graph import SpTaskGraph
 from repro.core.task import TaskView
 
@@ -70,6 +71,21 @@ class CancelToken:
         return self._event.wait(timeout)
 
 
+@sp_task(read=("inputs",), commutative=("out",), name="dup.copy")
+def _dup_copy(inputs, out, *, fn):
+    out.value = fn(*inputs)
+    return out.value
+
+
+@sp_task(read=("winner",), name="dup.select")
+def _dup_select(winner, *, token, n, label):
+    if token.winner is None:
+        raise RuntimeError(
+            f"{label}: all {n} duplicated copies failed"
+        ) from (token.failures[0] if token.failures else None)
+    return winner
+
+
 def run_duplicated(
     graph: SpTaskGraph,
     fn: Callable,
@@ -95,29 +111,15 @@ def run_duplicated(
         raise ValueError("need at least one copy")
     token = CancelToken()
 
-    def body(*args):
-        *vals, ref = args
-        ref.value = fn(*vals)
-        return ref.value
-
     for i in range(n):
-        view = graph.task(
-            *[SpRead(d) for d in inputs],
-            SpCommutativeWrite(out),
-            body,
-            name=f"{name}.copy{i}",
-            cost=cost,
+        view = _dup_copy(
+            list(inputs), out, fn=fn,
+            graph=graph, name=f"{name}.copy{i}", cost=cost,
         )
         view.task.cancel_token = token
 
-    def select(v):
-        if token.winner is None:
-            raise RuntimeError(
-                f"{name}: all {n} duplicated copies failed"
-            ) from (token.failures[0] if token.failures else None)
-        return v
-
-    return graph.task(SpRead(out), select, name=f"{name}.select")
+    return _dup_select(out, token=token, n=n, label=name,
+                       graph=graph, name=f"{name}.select")
 
 
 class FailureSimulator:

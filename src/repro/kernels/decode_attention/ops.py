@@ -1,18 +1,14 @@
-"""Wrapper + dispatch for the decode-attention kernel."""
+"""Wrapper + dispatch for the decode-attention kernel (codelet-registered)."""
 from __future__ import annotations
 
-import jax
+from repro.core.api import sp_task
+from repro.kernels.dispatch import interpret_mode, pallas_available
 
 from . import ref
 from .kernel import decode_attention_pallas
 
-
-def available() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+available = pallas_available
+_interpret = interpret_mode
 
 
 def decode_attention(q, k_cache, v_cache, pos, *, block_s: int = 512):
@@ -32,3 +28,16 @@ def decode_attention_ref(q, k_cache, v_cache, pos):
     return ref.decode_attention_ref(
         q[:, 0], k_cache.transpose(0, 2, 1, 3), v_cache.transpose(0, 2, 1, 3), pos
     )[:, None]
+
+
+# -- codelet registration (SpCpu/SpCuda selection, paper §4.3) ---------------
+
+@sp_task(read=("q", "k_cache", "v_cache", "pos"), write=("out",), name="decode_attention")
+def decode_attention_codelet(q, k_cache, v_cache, pos, out, *, block_s: int = 512):
+    del block_s  # tiling hint is meaningful only to the Pallas variant
+    out.value = decode_attention_ref(q, k_cache, v_cache, pos)
+
+
+@decode_attention_codelet.impl("pallas", available=pallas_available)
+def _decode_attention_pallas_impl(q, k_cache, v_cache, pos, out, *, block_s: int = 512):
+    out.value = decode_attention(q, k_cache, v_cache, pos, block_s=block_s)

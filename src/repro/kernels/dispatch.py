@@ -1,0 +1,32 @@
+"""Shared capability probes for the Pallas kernels (one copy, four users).
+
+Every ``kernels/*/ops.py`` used to carry its own ``available()`` /
+``_interpret()`` pair — and only flash-attention's honored
+``REPRO_FORCE_PALLAS_INTERPRET``.  This module is the single source of
+truth; the env var now forces interpret-mode Pallas availability for every
+kernel (useful for exercising the Pallas code path on CPU CI).
+
+These are also the ``available=`` predicates the kernel codelets register
+with the capability-dispatch frontend (``repro.core.api``).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def force_interpret() -> bool:
+    """True when REPRO_FORCE_PALLAS_INTERPRET requests interpret-mode Pallas."""
+    return bool(os.environ.get("REPRO_FORCE_PALLAS_INTERPRET"))
+
+
+def pallas_available() -> bool:
+    """Can the Pallas implementation run here?  On TPU, natively; elsewhere
+    only when interpret mode is forced."""
+    return force_interpret() or jax.default_backend() == "tpu"
+
+
+def interpret_mode() -> bool:
+    """Should ``pl.pallas_call`` run in interpret mode (any non-TPU backend)?"""
+    return jax.default_backend() != "tpu"

@@ -3,28 +3,23 @@
 Models call :func:`flash_attention` with (B, L, H, Dh)-layout tensors (the
 framework layout); this adapter transposes to the kernel's (B, H, L, Dh)
 layout, dispatches to Pallas on TPU (interpret mode elsewhere when forced),
-and falls back to the pure-jnp reference otherwise.
+and falls back to the pure-jnp reference otherwise.  The same pair is
+registered as :data:`flash_attention_codelet` for task-graph use.
 """
 from __future__ import annotations
 
-import os
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
+
+from repro.core.api import sp_task
+from repro.kernels.dispatch import interpret_mode, pallas_available
 
 from . import ref
 from .kernel import flash_attention_pallas
 
-
-def available() -> bool:
-    if os.environ.get("REPRO_FORCE_PALLAS_INTERPRET"):
-        return True
-    return jax.default_backend() == "tpu"
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+available = pallas_available
+_interpret = interpret_mode
 
 
 def flash_attention(
@@ -51,3 +46,17 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None, q_offset=0):
         q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
         causal=causal, window=window, q_offset=q_offset,
     ).swapaxes(1, 2)
+
+
+# -- codelet registration (SpCpu/SpCuda selection, paper §4.3) ---------------
+
+@sp_task(read=("q", "k", "v"), write=("out",), name="flash_attention", cost=10.0)
+def flash_attention_codelet(q, k, v, out, *, causal=True, window=None, q_offset=0):
+    out.value = flash_attention_ref(
+        q, k, v, causal=causal, window=window, q_offset=q_offset
+    )
+
+
+@flash_attention_codelet.impl("pallas", available=pallas_available)
+def _flash_attention_pallas_impl(q, k, v, out, *, causal=True, window=None, q_offset=0):
+    out.value = flash_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)

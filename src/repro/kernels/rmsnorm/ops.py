@@ -1,18 +1,14 @@
-"""Wrapper + dispatch for the fused RMSNorm kernel."""
+"""Wrapper + dispatch for the fused RMSNorm kernel (codelet-registered)."""
 from __future__ import annotations
 
-import jax
+from repro.core.api import sp_task
+from repro.kernels.dispatch import interpret_mode, pallas_available
 
 from . import ref
 from .kernel import rmsnorm_pallas
 
-
-def available() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+available = pallas_available
+_interpret = interpret_mode
 
 
 def rmsnorm(x, scale, eps: float = 1e-6):
@@ -25,3 +21,15 @@ def rmsnorm(x, scale, eps: float = 1e-6):
 
 
 rmsnorm_ref = ref.rmsnorm_ref
+
+
+# -- codelet registration (SpCpu/SpCuda selection, paper §4.3) ---------------
+
+@sp_task(read=("x", "scale"), write=("out",), name="rmsnorm")
+def rmsnorm_codelet(x, scale, out, *, eps: float = 1e-6):
+    out.value = rmsnorm_ref(x, scale, eps)
+
+
+@rmsnorm_codelet.impl("pallas", available=pallas_available)
+def _rmsnorm_pallas_impl(x, scale, out, *, eps: float = 1e-6):
+    out.value = rmsnorm(x, scale, eps)

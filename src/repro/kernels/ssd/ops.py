@@ -1,19 +1,18 @@
 """Wrapper: full chunked SSD built on the intra-chunk Pallas kernel plus the
-jnp inter-chunk recurrence — drop-in for models.ssm.ssd_chunked."""
+jnp inter-chunk recurrence — drop-in for models.ssm.ssd_chunked
+(codelet-registered)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.api import sp_task
+from repro.kernels.dispatch import interpret_mode, pallas_available
+
 from .kernel import ssd_intra_chunk_pallas
 
-
-def available() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+available = pallas_available
+_interpret = interpret_mode
 
 
 def ssd_chunked_pallas(xh, dt, A, Bc, Cc, chunk: int, initial_state=None):
@@ -57,3 +56,17 @@ def ssd_chunked_pallas(xh, dt, A, Bc, Cc, chunk: int, initial_state=None):
     y = (y_intra + y_inter).reshape(B_, H, nc, chunk, P).transpose(0, 2, 3, 1, 4)
     y = y.reshape(B_, L, H, P)
     return y, s_final.reshape(B_, H, N, P)
+
+
+# -- codelet registration (SpCpu/SpCuda selection, paper §4.3) ---------------
+
+@sp_task(read=("xh", "dt", "A", "Bc", "Cc"), write=("out",), name="ssd_chunked")
+def ssd_codelet(xh, dt, A, Bc, Cc, out, *, chunk: int, initial_state=None):
+    from repro.models.ssm import ssd_chunked
+
+    out.value = ssd_chunked(xh, dt, A, Bc, Cc, chunk, initial_state)
+
+
+@ssd_codelet.impl("pallas", available=pallas_available)
+def _ssd_pallas_impl(xh, dt, A, Bc, Cc, out, *, chunk: int, initial_state=None):
+    out.value = ssd_chunked_pallas(xh, dt, A, Bc, Cc, chunk, initial_state)

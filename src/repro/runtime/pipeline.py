@@ -4,8 +4,10 @@ GPipe-style microbatch pipelining is *exactly* the paper's model: stage
 executions are tasks, activations are the data dependencies, gradient
 accumulation across microbatches is commutative, and the schedule (GPipe
 fill-drain vs 1F1B) is nothing but the scheduler's choice among ready tasks
-— expressed here with ``SpPriority`` so the standard priority scheduler
-produces a 1F1B-flavoured order, while FIFO degrades to fill-drain.
+— expressed here with per-call priorities so the standard priority
+scheduler produces a 1F1B-flavoured order, while FIFO degrades to
+fill-drain.  The three task shapes (forward, loss-head, backward) are
+declared once as codelets and instantiated per (stage, microbatch).
 
 Task structure for S stages × M microbatches::
 
@@ -29,14 +31,52 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    SpCommutativeWrite,
     SpComputeEngine,
     SpData,
-    SpPriority,
-    SpRead,
     SpTaskGraph,
-    SpWrite,
+    graph_scope,
+    sp_task,
 )
+
+
+# ---------------------------------------------------------------------------
+# The three task shapes, declared once (codelet frontend, core/api.py).
+# ---------------------------------------------------------------------------
+
+@sp_task(read=("params", "x"), write=("act", "vjp"), name="F", cost=5.0)
+def _forward(params, x, act, vjp, *, stage_fn, first):
+    x_val = x["x"] if first and isinstance(x, dict) else x
+    y, pull = jax.vjp(stage_fn, params, x_val)
+    act.value = y
+    vjp.value = pull
+
+
+@sp_task(
+    read=("params", "x", "mb"),
+    write=("dact",),
+    commutative=("grads", "loss"),
+    name="L",
+    cost=2.0,
+)
+def _loss_head(params, x, mb, dact, grads, loss, *, head_fn, inv_m):
+    loss_val, pull = jax.vjp(lambda p_, x_: head_fn(p_, x_, mb), params, x)
+    gp, gx = pull(jnp.float32(inv_m))
+    dact.value = gx
+    grads.value = jax.tree.map(lambda a, g: a + g.astype(a.dtype), grads.value, gp)
+    loss.value = loss.value + loss_val * inv_m
+
+
+@sp_task(read=("pull", "dy"), commutative=("grads",), write=("dact",), name="B", cost=8.0)
+def _backward(pull, dy, grads, dact):
+    gp, gx = pull(dy)
+    grads.value = jax.tree.map(lambda a, g: a + g.astype(a.dtype), grads.value, gp)
+    dact.value = gx
+
+
+@sp_task(read=("pull", "dy"), commutative=("grads",), name="B0", cost=8.0)
+def _backward_first(pull, dy, grads):
+    gp, _ = pull(dy)
+    grads.value = jax.tree.map(lambda a, g: a + g.astype(a.dtype), grads.value, gp)
 
 
 def pipeline_value_and_grad(
@@ -81,83 +121,37 @@ def pipeline_value_and_grad(
             return base + (M - m) * 100 + (s if kind == "b" else S - s)
         return 0  # fifo / fill-drain
 
-    # ---- forward tasks -------------------------------------------------------
-    for m in range(M):
-        for s in range(S):
-            src = mb_cells[m] if s == 0 else act[s - 1][m]
+    with graph_scope(tg):
+        for m in range(M):
+            # ---- forward tasks ------------------------------------------------
+            for s in range(S):
+                src = mb_cells[m] if s == 0 else act[s - 1][m]
+                _forward(
+                    p_cells[s], src, act[s][m], vjp[s][m],
+                    stage_fn=stage_fns[s], first=(s == 0),
+                    name=f"F[{s},{m}]", priority=prio("f", s, m),
+                )
 
-            def fwd(p, x_in, a_ref, v_ref, _s=s):
-                x_val = x_in["x"] if _s == 0 and isinstance(x_in, dict) else x_in
-                y, pull = jax.vjp(stage_fns[_s], p, x_val)
-                a_ref.value = y
-                v_ref.value = pull
-
-            tg.task(
-                SpPriority(prio("f", s, m)),
-                SpRead(p_cells[s]),
-                SpRead(src),
-                SpWrite(act[s][m]),
-                SpWrite(vjp[s][m]),
-                fwd,
-                name=f"F[{s},{m}]",
-                cost=5.0,
+            # ---- loss head + seed backward ------------------------------------
+            _loss_head(
+                ph_cell, act[S - 1][m], mb_cells[m],
+                dact[S - 1][m], gh_cell, loss_cell,
+                head_fn=head_fn, inv_m=1.0 / M,
+                name=f"L[{m}]", priority=prio("b", S - 1, m) + 1,
             )
 
-        # ---- loss head + seed backward --------------------------------------
-        def head(ph, x, mb, d_ref, gh_ref, l_ref, _m=m):
-            loss, pull = jax.vjp(lambda p_, x_: head_fn(p_, x_, mb), ph, x)
-            gph, gx = pull(jnp.float32(1.0 / M))
-            d_ref.value = gx
-            gh_ref.value = jax.tree.map(
-                lambda a, g: a + g.astype(a.dtype), gh_ref.value, gph
-            )
-            l_ref.value = l_ref.value + loss / M
-
-        tg.task(
-            SpPriority(prio("b", S - 1, m) + 1),
-            SpRead(ph_cell),
-            SpRead(act[S - 1][m]),
-            SpRead(mb_cells[m]),
-            SpWrite(dact[S - 1][m]),
-            SpCommutativeWrite(gh_cell),
-            SpCommutativeWrite(loss_cell),
-            head,
-            name=f"L[{m}]",
-            cost=2.0,
-        )
-
-        # ---- backward tasks ---------------------------------------------------
-        for s in range(S - 1, -1, -1):
-
-            def bwd(pull, dy, g_ref, d_ref, _s=s):
-                gp, gx = pull(dy)
-                g_ref.value = jax.tree.map(
-                    lambda a, g: a + g.astype(a.dtype), g_ref.value, gp
-                )
-                if d_ref is not None:
-                    d_ref.value = gx
-
-            if s > 0:
-                tg.task(
-                    SpPriority(prio("b", s, m)),
-                    SpRead(vjp[s][m]),
-                    SpRead(dact[s][m]),
-                    SpCommutativeWrite(g_cells[s]),
-                    SpWrite(dact[s - 1][m]),
-                    lambda pull, dy, g_ref, d_ref, _s=s: bwd(pull, dy, g_ref, d_ref, _s),
-                    name=f"B[{s},{m}]",
-                    cost=8.0,
-                )
-            else:
-                tg.task(
-                    SpPriority(prio("b", s, m)),
-                    SpRead(vjp[0][m]),
-                    SpRead(dact[0][m]),
-                    SpCommutativeWrite(g_cells[0]),
-                    lambda pull, dy, g_ref, _s=0: bwd(pull, dy, g_ref, None, _s),
-                    name=f"B[0,{m}]",
-                    cost=8.0,
-                )
+            # ---- backward tasks -----------------------------------------------
+            for s in range(S - 1, -1, -1):
+                if s > 0:
+                    _backward(
+                        vjp[s][m], dact[s][m], g_cells[s], dact[s - 1][m],
+                        name=f"B[{s},{m}]", priority=prio("b", s, m),
+                    )
+                else:
+                    _backward_first(
+                        vjp[0][m], dact[0][m], g_cells[0],
+                        name=f"B[0,{m}]", priority=prio("b", 0, m),
+                    )
 
     tg.wait_all_tasks()
     return loss_cell.value, [g.value for g in g_cells], gh_cell.value, tg

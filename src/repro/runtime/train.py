@@ -1,43 +1,99 @@
-"""Training step built as an ``SpTaskGraph`` and compiled through the staged
-backend (DESIGN.md §2) — the paper's STF model driving a pod-scale SPMD step.
+"""Training step built from codelets and compiled through the staged backend
+(DESIGN.md §2) — the paper's STF model driving a pod-scale SPMD step.
 
-Task structure of one step (N microbatches)::
+Task structure of one step (N microbatches), three codelets declared once::
 
-    mb_0 ... mb_{N-1}   SpRead(params), SpRead(batch_i),
-                        SpCommutativeWrite(grads)      ← C1: order-free accum
+    mb_0 ... mb_{N-1}   read(params), read(batch_i),
+                        commutative(grads)             ← C1: order-free accum
     grad_finalize       comm task: mean + sharding constraint to the param
                         layout (the GSPMD reduce-scatter lands here)  ← C4
-    clip+check          SpRead(grads) → gnorm, finite flag
-    optimizer           SpWrite(params/opt): *speculative* update — computed
-                        unconditionally, selected by the finite flag
-                        (branchless TPU analogue of SpMaybeWrite+rollback, C6)
+    optimizer           write(params/opt): clip + nonfinite check +
+                        *speculative* update — computed unconditionally,
+                        selected by the finite flag (branchless TPU analogue
+                        of SpMaybeWrite+rollback, C6)
 
-The scheduler policy decides the compiled program order: ``overlap`` hoists
+The step runs on ``SpRuntime(backend="staged")`` inside ``jax.jit``: the
+scheduler policy decides the compiled program order — ``overlap`` hoists
 the comm task between independent microbatch tasks; commutative accumulation
 lets it reorder microbatches freely (both visible in EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import (
-    SpCommutativeWrite,
-    SpData,
-    SpRead,
-    SpTaskGraph,
-    SpWrite,
-    execute_staged,
-)
+from repro.core import SpData, SpRuntime, sp_task
 from repro.dist.collectives import compress_tree, init_residuals
 from repro.dist.sharding import current_mesh, named_sharding, shard
 from repro.models import abstract_params, loss_fn, model_defs, param_shardings
 from repro.models.config import ArchConfig, ShapeSpec
 from repro.models.param import abstract_tree, sharding_tree
 from repro.optim import TrainState, make_optimizer
+
+
+# ---------------------------------------------------------------------------
+# The three task shapes of a train step (codelet frontend, core/api.py).
+# ---------------------------------------------------------------------------
+
+@sp_task(read=("params", "mb"), commutative=("grads", "metrics"), name="mb", cost=10.0)
+def _microbatch_codelet(params, mb, grads, metrics, *, grad_fn):
+    """Forward+backward over one microbatch; order-free gradient accumulation."""
+    (loss, m), g = grad_fn(params, mb)
+    grads.value = jax.tree.map(
+        lambda acc, gg: acc + gg.astype(acc.dtype), grads.value, g
+    )
+    metrics.value = {
+        "loss": metrics.value["loss"] + loss.astype(jnp.float32),
+        "ce_loss": metrics.value["ce_loss"] + m["ce_loss"].astype(jnp.float32),
+    }
+    return loss
+
+
+@sp_task(write=("grads",), name="grad_allreduce", cost=3.0, comm=True)
+def _grad_finalize_codelet(grads, *, n_mb, compress, p_sh):
+    """Mean + (optional) int8 quantize-dequantize + reshard to the param
+    layout — the GSPMD reduce-scatter lands on this comm task."""
+    g = jax.tree.map(lambda t: t / n_mb, grads.value)
+    if compress:
+        # error-feedback residuals live across steps via state in a
+        # production driver; stateless inside one compiled step we
+        # quantize-dequantize only (documented in EXPERIMENTS.md)
+        g, _ = compress_tree(
+            g, jax.tree.map(lambda t: jnp.zeros_like(t, jnp.float32), g)
+        )
+    if p_sh is not None:
+        g = jax.tree.map(
+            lambda t, s: jax.lax.with_sharding_constraint(t, s), g, p_sh
+        )
+    grads.value = g
+
+
+@sp_task(
+    read=("grads",),
+    write=("params", "opt", "new_step"),
+    name="optimizer",
+    cost=5.0,
+)
+def _optimizer_codelet(
+    grads, params, opt, new_step, *, opt_update, lr_schedule, clip_norm, step
+):
+    """Clip + nonfinite check + branchless-speculative update (C6): the
+    update is computed unconditionally; rollback = select the old state."""
+    from repro.optim.optimizer import global_norm
+
+    gnorm = global_norm(grads)
+    finite = jnp.isfinite(gnorm)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    g_clipped = jax.tree.map(lambda t: t * scale, grads)
+    lr = lr_schedule(step)
+    cand_p, cand_o = opt_update(g_clipped, opt.value, params.value, lr, step)
+    sel = lambda new, old: jnp.where(finite, new, old)
+    params.value = jax.tree.map(sel, cand_p, params.value)
+    opt.value = jax.tree.map(sel, cand_o, opt.value)
+    new_step.value = step + 1
+    return gnorm
 
 
 class TrainStepArtifacts:
@@ -116,7 +172,6 @@ def build_train_step(
     schedule_names: list[str] = []
 
     def train_step(state: TrainState, batch: dict):
-        tg = SpTaskGraph()
         params_c = SpData(state.params, "params")
         zero_g = jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.dtype(grad_accum_dtype)), state.params
@@ -125,96 +180,37 @@ def build_train_step(
         metrics_c = SpData(
             {"loss": jnp.float32(0.0), "ce_loss": jnp.float32(0.0)}, "metrics"
         )
+        opt_c = SpData(state.opt, "opt")
+        new_step_c = SpData(None, "new_step")
 
-        # ---- microbatch forward+backward tasks (commutative accumulation) --
         n_mb = n_microbatches
         mb_batch = jax.tree.map(
             lambda t: t.reshape((n_mb, t.shape[0] // n_mb) + t.shape[1:]), batch
         )
         grad_fn = jax.value_and_grad(lambda p, b: loss_fn(p, b, cfg), has_aux=True)
-
-        for i in range(n_mb):
-            mb = jax.tree.map(lambda t: t[i], mb_batch)
-            mb_c = SpData(mb, f"mb{i}")
-
-            def body(p, b, g_ref, m_ref, _i=i):
-                (loss, metrics), g = grad_fn(p, b)
-                g_ref.value = jax.tree.map(
-                    lambda acc, gg: acc + gg.astype(acc.dtype), g_ref.value, g
-                )
-                m_ref.value = {
-                    "loss": m_ref.value["loss"] + loss.astype(jnp.float32),
-                    "ce_loss": m_ref.value["ce_loss"]
-                    + metrics["ce_loss"].astype(jnp.float32),
-                }
-                return loss
-
-            tg.task(
-                SpRead(params_c),
-                SpRead(mb_c),
-                SpCommutativeWrite(grads_c),
-                SpCommutativeWrite(metrics_c),
-                body,
-                name=f"mb{i}",
-                cost=10.0,
-            )
-
-        # ---- gradient finalize: mean + reshard (the collective lands here) --
         p_sh = param_shardings(cfg) if current_mesh() is not None else None
 
-        def grad_finalize(g_ref):
-            g = jax.tree.map(lambda t: t / n_mb, g_ref.value)
-            if grad_compression:
-                res_c = getattr(grad_finalize, "_residuals", None)
-                # error-feedback residuals live across steps via state in a
-                # production driver; stateless inside one compiled step we
-                # quantize-dequantize only (documented in EXPERIMENTS.md)
-                g, _ = compress_tree(g, jax.tree.map(lambda t: jnp.zeros_like(t, jnp.float32), g))
-            if p_sh is not None:
-                g = jax.tree.map(
-                    lambda t, s: jax.lax.with_sharding_constraint(t, s), g, p_sh
+        with SpRuntime(backend="staged", policy=schedule_policy) as rt:
+            for i in range(n_mb):
+                mb_c = SpData(jax.tree.map(lambda t: t[i], mb_batch), f"mb{i}")
+                _microbatch_codelet(
+                    params_c, mb_c, grads_c, metrics_c,
+                    grad_fn=grad_fn, name=f"mb{i}",
                 )
-            g_ref.value = g
-
-        tg.task(SpWrite(grads_c), grad_finalize, name="grad_allreduce", comm=True, cost=3.0)
-
-        # ---- clip + nonfinite check + speculative optimizer update ---------
-        opt_c = SpData(state.opt, "opt")
-        new_step_c = SpData(None, "new_step")
-
-        def opt_task(g, p_ref, o_ref, s_ref):
-            from repro.optim.optimizer import global_norm
-
-            gnorm = global_norm(g)
-            finite = jnp.isfinite(gnorm)
-            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
-            g_clipped = jax.tree.map(lambda t: t * scale, g)
-            lr = lr_schedule(state.step)
-            cand_p, cand_o = opt_update(g_clipped, o_ref.value, p_ref.value, lr, state.step)
-            # branchless speculation (C6 staged analogue): the update is
-            # computed unconditionally; rollback = select the old state
-            sel = lambda new, old: jnp.where(finite, new, old)
-            p_ref.value = jax.tree.map(sel, cand_p, p_ref.value)
-            o_ref.value = jax.tree.map(sel, cand_o, o_ref.value)
-            s_ref.value = state.step + 1
-            return gnorm
-
-        gnorm_view = tg.task(
-            SpRead(grads_c),
-            SpWrite(params_c),
-            SpWrite(opt_c),
-            SpWrite(new_step_c),
-            opt_task,
-            name="optimizer",
-            cost=5.0,
-        )
-
-        order = execute_staged(tg, schedule_policy)
+            _grad_finalize_codelet(
+                grads_c, n_mb=n_mb, compress=grad_compression, p_sh=p_sh
+            )
+            gnorm_view = _optimizer_codelet(
+                grads_c, params_c, opt_c, new_step_c,
+                opt_update=opt_update, lr_schedule=lr_schedule,
+                clip_norm=clip_norm, step=state.step,
+            )
+            order = rt.run()
         if not schedule_names:
             schedule_names.extend(t.name for t in order)
 
         metrics = jax.tree.map(lambda t: t / n_mb, metrics_c.value)
-        metrics["grad_norm"] = gnorm_view.task.result
+        metrics["grad_norm"] = gnorm_view.result()
         new_state = TrainState(
             step=new_step_c.value, params=params_c.value, opt=opt_c.value
         )

@@ -1,14 +1,15 @@
 """Continuous-batching serve engine driven by the Specx eager runtime.
 
 Requests are admitted into a fixed decode batch of ``n_slots`` sequences
-(the KV pool's capacity).  Each engine iteration is expressed as STF tasks:
+(the KV pool's capacity).  Each engine iteration is expressed as STF tasks
+— three codelets declared once at module level and instantiated per step:
 
-    admit      SpWrite(batch_state)  — prefill newly admitted requests into
-                                        their slots (host task calling the
-                                        jitted prefill; C3 data movement)
-    decode     SpWrite(batch_state)  — one fused decode step for the whole
-                                        batch (jitted serve step)
-    collect    SpRead(batch_state)   — emit finished sequences, free slots
+    admit      write(state)  — prefill newly admitted requests into
+                               their slots (host task calling the
+                               jitted prefill; C3 data movement)
+    decode     write(state)  — one fused decode step for the whole
+                               batch (jitted serve step)
+    collect    read(state)   — emit finished sequences, free slots
 
 The KV cache lives as one batched pytree (slot-major); admission writes a
 slot via masked updates.  LRU eviction (kvcache.py) frees slots of finished
@@ -29,10 +30,10 @@ import numpy as np
 from repro.core import (
     SpComputeEngine,
     SpData,
-    SpRead,
     SpTaskGraph,
     SpWorkerTeamBuilder,
-    SpWrite,
+    graph_scope,
+    sp_task,
 )
 from repro.models import decode_step, init_cache, prefill
 from repro.models.config import ArchConfig
@@ -40,6 +41,46 @@ from repro.runtime.serve import prime_cache
 from repro.serving.kvcache import KVPagePool
 
 _req_ids = itertools.count()
+
+
+# ---------------------------------------------------------------------------
+# The per-iteration task shapes (codelets; ``eng`` is the ServeEngine).
+# ---------------------------------------------------------------------------
+
+@sp_task(write=("state",), name="admit")
+def _admit_codelet(state, *, eng):
+    while eng._queue and eng.pool.n_active < eng.n_slots:
+        eng._admit_one(eng._queue.popleft())
+    state.value = {"caches": eng._caches, "tok": eng._last_tok}
+
+
+@sp_task(write=("state",), name="decode", cost=10.0)
+def _decode_codelet(state, *, eng):
+    if not eng._slot_req:
+        return
+    st = state.value
+    logits, new_caches = eng._decode(
+        eng.params, st["tok"], st["caches"], jnp.asarray(eng._pos)
+    )
+    toks = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+    state.value = {"caches": new_caches, "tok": toks}
+
+
+@sp_task(read=("state",), name="collect")
+def _collect_codelet(state, *, eng):
+    if not eng._slot_req:
+        return
+    eng._caches = state["caches"]
+    eng._last_tok = state["tok"]
+    toks = np.asarray(state["tok"][:, 0])
+    for slot, req in list(eng._slot_req.items()):
+        req.out_tokens.append(int(toks[slot]))
+        eng._pos[slot] += 1
+        eng.pool.touch(req.req_id)
+        if len(req.out_tokens) >= req.max_new_tokens:
+            req.done = True
+            eng.pool.release(req.req_id, keep_resident=True)
+            del eng._slot_req[slot]
 
 
 @dataclass
@@ -116,50 +157,15 @@ class ServeEngine:
         self._pos[slot] = prompt.shape[1]
 
     def step(self) -> None:
-        """One serve iteration as an STF task graph."""
+        """One serve iteration as an STF task graph (the three codelets)."""
         tg = SpTaskGraph().compute_on(self.engine)
         state_cell = SpData(
             {"caches": self._caches, "tok": self._last_tok}, "serve_state"
         )
-
-        def admit(ref):
-            while self._queue and self.pool.n_active < self.n_slots:
-                try:
-                    self._admit_one(self._queue.popleft())
-                except Exception:
-                    raise
-            ref.value = {"caches": self._caches, "tok": self._last_tok}
-
-        tg.task(SpWrite(state_cell), admit, name="admit")
-
-        def decode(ref):
-            if not self._slot_req:
-                return
-            st = ref.value
-            logits, new_caches = self._decode(
-                self.params, st["tok"], st["caches"], jnp.asarray(self._pos)
-            )
-            toks = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
-            ref.value = {"caches": new_caches, "tok": toks}
-
-        tg.task(SpWrite(state_cell), decode, name="decode", cost=10.0)
-
-        def collect(st):
-            if not self._slot_req:
-                return
-            self._caches = st["caches"]
-            self._last_tok = st["tok"]
-            toks = np.asarray(st["tok"][:, 0])
-            for slot, req in list(self._slot_req.items()):
-                req.out_tokens.append(int(toks[slot]))
-                self._pos[slot] += 1
-                self.pool.touch(req.req_id)
-                if len(req.out_tokens) >= req.max_new_tokens:
-                    req.done = True
-                    self.pool.release(req.req_id, keep_resident=True)
-                    del self._slot_req[slot]
-
-        tg.task(SpRead(state_cell), collect, name="collect")
+        with graph_scope(tg):
+            _admit_codelet(state_cell, eng=self)
+            _decode_codelet(state_cell, eng=self)
+            _collect_codelet(state_cell, eng=self)
         tg.wait_all_tasks()
         self.steps += 1
 

@@ -1,0 +1,357 @@
+"""Codelet frontend (core/api.py): declaration, capability dispatch,
+backend parity, speculation through the decorator, future-like TaskView,
+and the pick_impl regression (ISSUE 4)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    SpData,
+    SpRead,
+    SpRuntime,
+    SpSpeculativeModel,
+    SpTaskGraph,
+    SpWorkerTeam,
+    SpWrite,
+    Task,
+    graph_scope,
+    sp_task,
+)
+from repro.kernels.dispatch import pallas_available
+
+
+# ---------------------------------------------------------------------------
+# Declaration spellings.
+# ---------------------------------------------------------------------------
+
+def test_kwarg_spelling_slots_in_signature_order():
+    @sp_task(write=("out",), read=("a", "b"))
+    def f(a, b, out):
+        out.value = a + b
+
+    assert [s.name for s in f.slots] == ["a", "b", "out"]
+    assert [s.mode.name for s in f.slots] == ["READ", "READ", "WRITE"]
+
+
+def test_annotation_spelling():
+    @sp_task
+    def f(a: SpRead, out: SpWrite, *, k=1.0):
+        out.value = a * k
+
+    assert [s.name for s in f.slots] == ["a", "out"]
+    a, out = SpData(3.0), SpData(None)
+    with SpRuntime(backend="eager", workers=1):
+        f(a, out, k=2.0)
+    assert out.value == 6.0
+
+
+def test_bad_declarations_rejected():
+    with pytest.raises(ValueError, match="two access modes"):
+        @sp_task(read=("a",), write=("a",))
+        def f(a):
+            pass
+
+    with pytest.raises(ValueError, match="not positional parameters"):
+        @sp_task(read=("nope",))
+        def g(a):
+            pass
+
+    with pytest.raises(ValueError, match="no data slots"):
+        @sp_task
+        def h(a, b):
+            pass
+
+
+def test_call_errors():
+    @sp_task(read=("a",))
+    def f(a, *, k=1):
+        return a * k
+
+    a = SpData(1.0)
+    with pytest.raises(RuntimeError, match="outside a graph scope"):
+        f(a)
+    tg = SpTaskGraph()
+    with graph_scope(tg):
+        with pytest.raises(TypeError, match="missing data slots"):
+            f()
+        with pytest.raises(TypeError, match="unknown static parameters"):
+            f(a, zzz=1)
+        with pytest.raises(TypeError, match="takes an SpData cell"):
+            f(42)
+
+
+# ---------------------------------------------------------------------------
+# One definition, two backends — identical numerics.
+# ---------------------------------------------------------------------------
+
+@sp_task(read=("x",), write=("y",))
+def _scale(x, y, *, alpha=2.0):
+    y.value = alpha * x + jnp.sin(x)
+
+
+@sp_task(commutative=("acc",))
+def _bump(acc, *, inc):
+    acc.value = acc.value + inc
+
+
+def _run_chain(backend):
+    x = SpData(jnp.arange(8.0), "x")
+    y = SpData(None, "y")
+    acc = SpData(jnp.zeros(()), "acc")
+    kw = {"workers": 2} if backend == "eager" else {"policy": "overlap"}
+    with SpRuntime(backend=backend, **kw) as rt:
+        _scale(x, y, alpha=3.0)
+        for i in range(5):
+            _bump(acc, inc=float(i), name=f"bump{i}")
+        rt.wait_all_tasks()
+    return np.asarray(y.value), float(acc.value)
+
+
+def test_same_codelet_eager_and_staged_identical():
+    y_e, acc_e = _run_chain("eager")
+    y_s, acc_s = _run_chain("staged")
+    np.testing.assert_allclose(y_e, y_s)
+    assert acc_e == acc_s == 10.0
+
+
+# ---------------------------------------------------------------------------
+# Capability dispatch (SpCpu/SpCuda selection, paper §4.3).
+# ---------------------------------------------------------------------------
+
+def _dispatch_codelet(ran):
+    @sp_task(read=("x",), write=("y",))
+    def work(x, y):
+        ran.append("ref")
+        y.value = x * 2
+
+    @work.impl("pallas", available=pallas_available)
+    def _(x, y):
+        ran.append("pallas")
+        y.value = x * 2
+
+    return work
+
+
+def test_staged_dispatch_prefers_pallas_under_forced_interpret(monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_PALLAS_INTERPRET", "1")
+    ran = []
+    x, y = SpData(21.0), SpData(None)
+    with SpRuntime(backend="staged") as rt:
+        _dispatch_codelet(ran)(x, y)
+    assert y.value == 42.0
+    assert ran == ["pallas"]
+
+
+def test_staged_dispatch_falls_back_to_ref_without_capability(monkeypatch):
+    monkeypatch.delenv("REPRO_FORCE_PALLAS_INTERPRET", raising=False)
+    ran = []
+    x, y = SpData(21.0), SpData(None)
+    with SpRuntime(backend="staged") as rt:
+        _dispatch_codelet(ran)(x, y)
+    assert y.value == 42.0
+    assert ran == ["ref"]  # pallas filtered out at call time off-TPU
+
+
+def test_eager_dispatch_by_worker_kind(monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_PALLAS_INTERPRET", "1")
+    ran = []
+    x, y = SpData(21.0), SpData(None)
+    team = SpWorkerTeam(["pallas"])  # one device-kind worker
+    with SpRuntime(backend="eager", workers=team) as rt:
+        _dispatch_codelet(ran)(x, y)
+        rt.wait_all_tasks()
+    assert y.value == 42.0 and ran == ["pallas"]
+
+
+def test_kernel_codelet_capability_dispatch(monkeypatch):
+    """The registered rmsnorm codelet picks the (interpret-mode) Pallas
+    kernel under forced interpret and matches the reference numerics."""
+    from repro.kernels.rmsnorm.ops import rmsnorm_codelet, rmsnorm_ref
+
+    assert rmsnorm_codelet.impl_kinds == ["pallas", "ref"]
+    x = np.random.default_rng(0).normal(size=(4, 128)).astype(np.float32)
+    scale = np.ones(128, np.float32)
+    monkeypatch.delenv("REPRO_FORCE_PALLAS_INTERPRET", raising=False)
+    assert rmsnorm_codelet.available_kinds() == ["ref"]
+    monkeypatch.setenv("REPRO_FORCE_PALLAS_INTERPRET", "1")
+    assert rmsnorm_codelet.available_kinds() == ["pallas", "ref"]
+
+    xc, sc, out = SpData(jnp.asarray(x)), SpData(jnp.asarray(scale)), SpData(None)
+    with SpRuntime(backend="staged") as rt:
+        v = rmsnorm_codelet(xc, sc, out)
+        v.result()
+    np.testing.assert_allclose(
+        np.asarray(out.value), np.asarray(rmsnorm_ref(x, scale, 1e-6)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_force_interpret_honored_by_all_four_kernels(monkeypatch):
+    """Regression: REPRO_FORCE_PALLAS_INTERPRET used to be honored only by
+    flash_attention/ops.py."""
+    import repro.kernels.decode_attention.ops as da
+    import repro.kernels.flash_attention.ops as fa
+    import repro.kernels.rmsnorm.ops as rn
+    import repro.kernels.ssd.ops as ssd
+
+    monkeypatch.setenv("REPRO_FORCE_PALLAS_INTERPRET", "1")
+    assert all(m.available() for m in (fa, da, rn, ssd))
+
+
+# ---------------------------------------------------------------------------
+# pick_impl regression: no silent any-impl fallback.
+# ---------------------------------------------------------------------------
+
+def test_pick_impl_raises_keyerror_without_ref_fallback():
+    t = Task({"pallas": lambda: None, "host": lambda: None}, [], [])
+    with pytest.raises(KeyError, match=r"no 'cuda' implementation.*'host', 'pallas'"):
+        t.pick_impl("cuda")
+    # the documented fallback chain still works
+    t2 = Task({"ref": (lambda: 1)}, [], [])
+    assert t2.pick_impl("pallas")() == 1
+
+
+# ---------------------------------------------------------------------------
+# Future-like TaskView.
+# ---------------------------------------------------------------------------
+
+@sp_task(read=("x",))
+def _boom(x):
+    raise ValueError("kaboom")
+
+
+@pytest.mark.parametrize("backend", ["eager", "staged"])
+def test_exception_propagates_through_result(backend):
+    x = SpData(1.0)
+    kw = {"workers": 1} if backend == "eager" else {}
+    with SpRuntime(backend=backend, **kw) as rt:
+        v = _boom(x)
+        with pytest.raises(ValueError, match="kaboom"):
+            v.result()
+        assert isinstance(v.exception(), ValueError)
+        assert v.done()
+    # observed errors are not re-raised at scope exit (we got here)
+
+
+def test_unobserved_error_raises_at_scope_exit():
+    x = SpData(1.0)
+    with pytest.raises(ValueError, match="kaboom"):
+        with SpRuntime(backend="staged"):
+            _boom(x)
+
+
+def test_staged_failure_cancels_downstream_and_result_raises():
+    """A downstream task cancelled by an upstream staged failure must not
+    report success: result()/exception() raise CancelledError."""
+    from concurrent.futures import CancelledError
+
+    @sp_task(write=("x",))
+    def fail_writer(x):
+        raise ValueError("kaboom")
+
+    @sp_task(read=("x",))
+    def consumer(x):
+        return x
+
+    x = SpData(1.0)
+    with SpRuntime(backend="staged") as rt:
+        head = fail_writer(x)
+        down = consumer(x)
+        with pytest.raises(ValueError, match="kaboom"):
+            head.result()
+        assert down.done()
+        with pytest.raises(CancelledError):
+            down.result()
+        with pytest.raises(CancelledError):
+            down.exception()
+
+
+@pytest.mark.parametrize("backend", ["eager", "staged"])
+def test_then_chaining(backend):
+    @sp_task(read=("a", "b"))
+    def add(a, b):
+        return a + b
+
+    a, b = SpData(2.0), SpData(3.0)
+    kw = {"workers": 2} if backend == "eager" else {}
+    with SpRuntime(backend=backend, **kw) as rt:
+        v = add(a, b).then(lambda s: s * 10).then(lambda s: s + 1)
+        assert v.result() == 51.0
+
+
+def test_staged_result_triggers_flush():
+    """On the staged backend nothing runs until asked; result() is an ask."""
+    @sp_task(read=("a",), write=("out",))
+    def work(a, out):
+        out.value = a + 1
+        return out.value
+
+    a, out = SpData(1.0), SpData(None)
+    with SpRuntime(backend="staged") as rt:
+        v = work(a, out)
+        assert not v.done() and out.value is None  # pending
+        assert v.result() == 2.0                   # flushes
+        assert v.done() and out.value == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Speculation through the decorator path (SpMaybeWrite slot).
+# ---------------------------------------------------------------------------
+
+@sp_task(maybe=("state",))
+def _maybe_writer(state, *, do_write):
+    if do_write:
+        state.value = state.value + 100.0
+
+
+@sp_task(read=("state",), write=("out",))
+def _reader(state, out):
+    out.value = state * 2
+
+
+@pytest.mark.parametrize("do_write,expected,key", [
+    (False, 2.0, "commits"),
+    (True, 202.0, "rollbacks"),
+])
+def test_speculation_through_decorator(do_write, expected, key):
+    state, out = SpData(1.0, "state"), SpData(None, "out")
+    with SpRuntime(
+        backend="eager", workers=2,
+        speculative_model=SpSpeculativeModel.SP_MODEL_1,
+    ) as rt:
+        _maybe_writer(state, do_write=do_write)
+        _reader(state, out)
+        rt.wait_all_tasks()
+    assert out.value == expected
+    assert rt.graph.spec_stats["speculated"] == 1
+    assert rt.graph.spec_stats[key] == 1
+
+
+# ---------------------------------------------------------------------------
+# The positional shim and the legacy runtime spelling.
+# ---------------------------------------------------------------------------
+
+def test_positional_shim_and_legacy_int_runtime():
+    rt = SpRuntime(2)  # legacy SpRuntime(n_threads)
+    try:
+        assert rt.backend == "eager"
+        a, b = SpData(1.0, "a"), SpData(0.0, "b")
+        view = rt.task(SpRead(a), SpWrite(b),
+                       lambda av, bref: setattr(bref, "value", av + 41))
+        rt.wait_all_tasks()
+        assert b.value == 42.0 and view.get_value() is None
+    finally:
+        rt.stop()
+
+
+def test_array_slot_binding():
+    @sp_task(read=("cells",), write=("out",))
+    def total(cells, out):
+        out.value = sum(cells)
+
+    cells = [SpData(float(i)) for i in range(5)]
+    out = SpData(None)
+    with SpRuntime(backend="eager", workers=2):
+        total([cells[i] for i in (1, 3)], out)
+    assert out.value == 4.0
