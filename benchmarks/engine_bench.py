@@ -6,7 +6,12 @@ locality-aware work stealing), several team sizes:
 * **dispatch** — chains of empty-body tasks.  Nothing to compute, so the
   wall clock *is* the runtime: ``us_per_task`` here is the per-task
   dispatch overhead (insert → ready → pop → execute → release).  This is
-  the number the CI smoke job gates on (>2× regression fails).
+  the number the CI smoke job gates on (>2× regression fails).  Measured
+  through **both frontends**: the positional ``tg.task(...)`` spelling
+  (``frontend="task"``) and the codelet ``@sp_task`` spelling
+  (``frontend="codelet"``), which additionally allocates the hidden result
+  cell + WRITE access behind ``TaskView.then`` — the ROADMAP's
+  "codelet-path dispatch cost" is this delta, now tracked per row.
 * **scaling** — the ``engine_scaling.py`` protocol with data dependencies:
   ``n_chains = 2 × n_workers`` independent chains whose task bodies sleep a
   fixed duration (sleeps release the GIL, so worker threads genuinely
@@ -34,6 +39,7 @@ from repro.core import (
     SpWorkerTeamBuilder,
     SpWrite,
     WorkStealingScheduler,
+    sp_task,
 )
 
 SCHEDULER_FACTORIES = {
@@ -43,17 +49,26 @@ SCHEDULER_FACTORIES = {
 }
 
 
+@sp_task(write=("cell",), name="bench.codelet")
+def _codelet_step(cell, *, duration=0.0):
+    if duration > 0:
+        time.sleep(duration)
+
+
 def run_chains(
     scheduler_name: str,
     n_workers: int,
     n_chains: int,
     chain_len: int,
     duration: float = 0.0,
+    frontend: str = "task",
 ) -> dict:
     """One measured run: ``n_chains`` independent write-chains of
     ``chain_len`` tasks each, bodies sleeping ``duration`` seconds
-    (0 = empty body, pure dispatch).  Production settings: ``trace=False``
-    so the run allocates no per-task trace events."""
+    (0 = empty body, pure dispatch).  ``frontend`` selects the insertion
+    spelling: positional ``tg.task(...)`` or the ``@sp_task`` codelet.
+    Production settings: ``trace=False`` so the run allocates no per-task
+    trace events."""
     sched = SCHEDULER_FACTORIES[scheduler_name]()
     eng = SpComputeEngine(
         SpWorkerTeamBuilder.team_of_cpu_workers(n_workers), scheduler=sched
@@ -62,17 +77,30 @@ def run_chains(
         tg = SpTaskGraph(trace=False)
         cells = [SpData(0, f"c{i}") for i in range(n_chains)]
         tg.compute_on(eng)
-        body = (lambda ref: time.sleep(duration)) if duration > 0 else (lambda ref: None)
         t0 = time.perf_counter()
-        for _step in range(chain_len):
-            for c in range(n_chains):
-                tg.task(SpWrite(cells[c]), body)
+        if frontend == "codelet":
+            # duration=0 calls omit the static kwarg so the dispatch row
+            # measures the bare codelet path (no functools.partial layer)
+            if duration > 0:
+                for _step in range(chain_len):
+                    for c in range(n_chains):
+                        _codelet_step(cells[c], duration=duration, graph=tg)
+            else:
+                for _step in range(chain_len):
+                    for c in range(n_chains):
+                        _codelet_step(cells[c], graph=tg)
+        else:
+            body = (lambda ref: time.sleep(duration)) if duration > 0 else (lambda ref: None)
+            for _step in range(chain_len):
+                for c in range(n_chains):
+                    tg.task(SpWrite(cells[c]), body)
         tg.wait_all_tasks()
         wall = time.perf_counter() - t0
         n_tasks = n_chains * chain_len
         row = {
             "scheduler": scheduler_name,
             "n_workers": n_workers,
+            "frontend": frontend,
             "n_tasks": n_tasks,
             "task_duration_s": duration,
             "wall_s": wall,
@@ -110,7 +138,12 @@ def run_suite(smoke: bool = False) -> dict:
     scale_len = 40 if smoke else 120
     scale_workers = (2, 4) if smoke else (2, 4, 8)
     dispatch = _measure_interleaved(
-        [(name, w, 2 * w, chain_len, 0.0) for name in SCHEDULER_FACTORIES for w in (1, 4)],
+        [
+            (name, w, 2 * w, chain_len, 0.0, fe)
+            for fe in ("task", "codelet")
+            for name in SCHEDULER_FACTORIES
+            for w in (1, 4)
+        ],
         reps,
     )
     scaling = _measure_interleaved(
@@ -128,7 +161,8 @@ def run_suite(smoke: bool = False) -> dict:
             "reps": reps,
             "schedulers": list(SCHEDULER_FACTORIES),
             "workload": "independent write-chains (2x workers), empty-body for "
-            "dispatch overhead, 0.2 ms sleep bodies for scaling",
+            "dispatch overhead (tg.task and @sp_task frontends), 0.2 ms sleep "
+            "bodies for scaling",
         },
         "dispatch": dispatch,
         "scaling": scaling,
@@ -140,16 +174,19 @@ def compare_against_baseline(current: dict, baseline: dict, factor: float = 2.0)
     ``factor`` × the checked-in baseline for every matching configuration.
     Returns a list of human-readable failures (empty = pass)."""
     base_by_key = {
-        (r["scheduler"], r["n_workers"]): r for r in baseline.get("dispatch", ())
+        (r["scheduler"], r["n_workers"], r.get("frontend", "task")): r
+        for r in baseline.get("dispatch", ())
     }
     failures = []
     for row in current.get("dispatch", ()):
-        base = base_by_key.get((row["scheduler"], row["n_workers"]))
+        key = (row["scheduler"], row["n_workers"], row.get("frontend", "task"))
+        base = base_by_key.get(key)
         if base is None:
             continue
         if row["us_per_task"] > factor * base["us_per_task"]:
             failures.append(
-                f"dispatch overhead regression: {row['scheduler']} @{row['n_workers']}w "
+                f"dispatch overhead regression: {row['scheduler']} "
+                f"@{row['n_workers']}w ({key[2]} frontend) "
                 f"{row['us_per_task']:.1f} us/task vs baseline "
                 f"{base['us_per_task']:.1f} us/task (>{factor:.1f}x)"
             )
@@ -160,11 +197,12 @@ def main(out: str = "BENCH_engine.json", smoke: bool = False) -> dict:
     payload = run_suite(smoke=smoke)
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
-    print("workload,scheduler,n_workers,tasks_per_s,us_per_task")
+    print("workload,scheduler,n_workers,frontend,tasks_per_s,us_per_task")
     for section in ("dispatch", "scaling"):
         for r in payload[section]:
             print(
                 f"{section},{r['scheduler']},{r['n_workers']},"
+                f"{r.get('frontend', 'task')},"
                 f"{r['tasks_per_s']:.0f},{r['us_per_task']:.2f}"
             )
     return payload

@@ -38,8 +38,11 @@ def _engine_section(smoke: bool, out: str, baseline: str | None) -> None:
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
     for r in payload["dispatch"]:
+        # codelet-frontend rows get a suffix; "task" rows keep the legacy
+        # names so the checked-in baseline keys stay stable
+        suffix = "" if r.get("frontend", "task") == "task" else f"_{r['frontend']}"
         _row(
-            f"engine_dispatch_{r['scheduler']}_{r['n_workers']}w",
+            f"engine_dispatch_{r['scheduler']}_{r['n_workers']}w{suffix}",
             r["us_per_task"],
             f"tasks_per_s={r['tasks_per_s']:.0f}",
         )

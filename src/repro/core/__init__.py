@@ -65,12 +65,22 @@ from .access import (
 )
 from .comm import (
     ChannelHub,
+    SocketTransport,
+    SpCommAbortedError,
+    SpCommError,
     SpCommGroup,
+    SpCommTimeoutError,
     SpDeserializer,
     SpSerializer,
+    SpTransport,
+    decode_message,
+    default_hub,
+    encode_message,
     mpi_broadcast,
     mpi_recv,
     mpi_send,
+    register_wire_type,
+    reset_default_hub,
 )
 from .engine import SpComputeEngine, SpWorker, SpWorkerTeam, SpWorkerTeamBuilder
 from .graph import SpSpeculativeModel, SpTaskGraph
@@ -94,7 +104,10 @@ __all__ = [
     "SpCommutativeWrite", "SpCommutativeWriteArray", "SpCpu", "SpCuda", "SpData",
     "SpHip", "SpHost", "SpImpl", "SpMaybeWrite", "SpMaybeWriteArray", "SpPallas",
     "SpPriority", "SpRead", "SpReadArray", "SpRef", "SpWrite", "SpWriteArray",
-    "SpWriteRef", "ChannelHub", "SpCommGroup", "SpDeserializer", "SpSerializer",
+    "SpWriteRef", "ChannelHub", "SocketTransport", "SpTransport", "SpCommGroup",
+    "SpCommError", "SpCommTimeoutError", "SpCommAbortedError",
+    "SpDeserializer", "SpSerializer", "decode_message", "default_hub",
+    "encode_message", "register_wire_type", "reset_default_hub",
     "mpi_broadcast", "mpi_recv", "mpi_send", "SpComputeEngine", "SpWorker",
     "SpWorkerTeam", "SpWorkerTeamBuilder", "SpRuntime", "SpSpeculativeModel",
     "SpTaskGraph", "SpCodelet", "SpSlot", "sp_task", "graph_scope", "current_graph",

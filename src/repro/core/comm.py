@@ -1,4 +1,5 @@
-"""Communication tasks + background progress thread (paper §4.4).
+"""Communication tasks, transports, and the background progress thread
+(paper §4.4).
 
 Specx integrates MPI into the task graph: send/recv become *communication
 tasks* whose execution is delegated to a dedicated background thread that
@@ -6,14 +7,44 @@ starts non-blocking operations, polls them (MPI ``test``-style), and
 releases dependencies as soon as a request completes — "the progression is
 done as early as possible".
 
-Adaptation (DESIGN.md §2): inside one Python process there is no MPI; the
-"wire" is an in-process :class:`ChannelHub` connecting Specx *instances*
-(rank-tagged graph+engine pairs), with the same non-blocking start/test
-protocol so the background-thread design is exercised faithfully.  On a real
-multi-host JAX cluster the hub's role is played by the `jax.distributed`
-transfer layer; in the *staged* backend cross-device communication lowers to
-compiled XLA collectives instead (see ``staged.py`` and
-``repro/dist/collectives.py``).
+Transport split (DESIGN.md §2, ROADMAP "Multi-host ChannelHub"):
+
+* :class:`SpTransport` is the wire abstraction: ``post(key, msg)`` /
+  ``poll(key)`` mailboxes keyed by ``(src, dst, tag)``.  ``poll`` is
+  **non-blocking by contract** — the comm thread's start/test loop calls it
+  on every request tick and must never sleep inside a transport.
+
+* :class:`ChannelHub` is the in-process transport: rank-tagged Specx
+  *instances* inside one process exchange live Python objects through
+  locked deques.  Drained mailboxes are pruned on ``poll`` so per-step
+  tags do not accumulate across a training run.
+
+* :class:`SocketTransport` is the cross-process TCP transport.  Rendezvous
+  is a localhost star: rank 0 binds the port and runs a frame router
+  (:class:`_Router`), every rank — including rank 0 — dials it and sends a
+  4-byte hello carrying its rank.  Messages are length-prefixed frames
+  ``[len][src][dst][taglen][tag][payload]``; the router forwards each frame
+  to ``dst``'s connection, and a per-transport receiver thread deposits
+  decoded messages into local mailboxes, so ``poll`` only ever inspects a
+  dict under a lock (no ``recv()`` on the poll path).
+
+Wire format: :func:`encode_message` / :func:`decode_message` are the single
+canonical encoding used whenever a message must leave the process — a typed,
+self-describing byte stream (``SpSerializer.append_obj``) covering arrays,
+scalars, strings/bytes, pytrees (tuple/list/dict), and tagged
+``sp_serialize`` / ``comm_buffer`` objects.  Classes cross the wire as
+*registered type names* (``register_wire_type``; auto-registered at pack
+time and resolved by import on the receiving side), never as pickled
+``type`` objects.
+
+Timeout semantics: ``mpi_recv`` / ``mpi_broadcast`` accept ``timeout=``
+(seconds, default :attr:`SpCommGroup.default_timeout`); a request whose
+peer never posts fails with :class:`SpCommTimeoutError` *as the task's
+exception* — observable via ``TaskView.exception()`` and re-raised by
+``wait_all_tasks`` — instead of spinning the comm thread forever.
+``CommThread.stop()`` likewise no longer abandons in-flight requests: after
+a grace period it aborts them with :class:`SpCommAbortedError` and reports
+the affected task names.
 
 Note on access modes: the paper's prose says a send "does a write access"
 and a receive "performs a read access"; that is logically inverted (a recv
@@ -26,9 +57,14 @@ Speculation is refused on communication (paper §4.4 last paragraph).
 from __future__ import annotations
 
 import collections
+import functools
+import importlib
+import socket
+import struct
 import threading
 import time
-from typing import Any
+import warnings
+from typing import Any, Callable, Optional
 
 import numpy as np
 
@@ -37,13 +73,80 @@ from .graph import SpSpeculativeModel, SpTaskGraph
 from .task import Task, TaskState, TaskView
 
 
+class SpCommError(RuntimeError):
+    """Base class for communication-layer failures."""
+
+
+class SpCommTimeoutError(SpCommError):
+    """A receive's deadline passed with no matching message posted."""
+
+
+class SpCommAbortedError(SpCommError):
+    """The comm thread was stopped while this request was still in flight."""
+
+
 # ---------------------------------------------------------------------------
-# Serialization (paper §4.4 rules 1–3).
+# Registered-type table: classes cross the wire as names, not type objects.
 # ---------------------------------------------------------------------------
 
+_WIRE_TYPES: dict[str, type] = {}
+
+
+def register_wire_type(cls: type | None = None, *, name: str | None = None):
+    """Register ``cls`` for tagged (``sp_serialize`` / ``comm_buffer``)
+    transfer.  Usable as a decorator.  Registration is automatic at pack
+    time; the receiving process resolves unknown names by importing
+    ``module:qualname``, so explicit registration is only needed for names
+    that are not importable (e.g. classes defined inside a function)."""
+
+    def reg(c: type):
+        key = name or f"{c.__module__}:{c.__qualname__}"
+        _WIRE_TYPES[key] = c
+        c._sp_wire_name_ = key
+        return c
+
+    return reg if cls is None else reg(cls)
+
+
+def _wire_name(cls: type) -> str:
+    key = cls.__dict__.get("_sp_wire_name_")
+    if key is None or _WIRE_TYPES.get(key) is not cls:
+        register_wire_type(cls)
+        key = cls.__dict__["_sp_wire_name_"]
+    return key
+
+
+def resolve_wire_type(name: str) -> type:
+    """Name → class: registry first, then ``module:qualname`` import."""
+    cls = _WIRE_TYPES.get(name)
+    if cls is None:
+        modname, _, qual = name.partition(":")
+        obj: Any = importlib.import_module(modname)
+        for part in qual.split("."):
+            obj = getattr(obj, part)
+        cls = obj
+        _WIRE_TYPES[name] = cls
+    return cls
+
+
+# ---------------------------------------------------------------------------
+# Serialization (paper §4.4 rules 1–3) — the canonical wire codec.
+# ---------------------------------------------------------------------------
+
+_I64_MIN, _I64_MAX = -(1 << 63), (1 << 63) - 1
+_U32 = struct.Struct("<I")
+_I64 = struct.Struct("<q")
+_F64 = struct.Struct("<d")
+
+
 class SpSerializer:
-    """Utility serializer: packs arrays/scalars into one flat byte buffer —
-    the paper's "single array suitable for communication"."""
+    """Packs values into one flat byte buffer — the paper's "single array
+    suitable for communication".
+
+    ``append_array`` / ``append_scalar`` write the legacy raw array frame
+    (header + bytes), used by ``sp_serialize`` implementations.
+    ``append_obj`` writes the typed, self-describing encoding used for
+    whole messages (:func:`encode_message`)."""
 
     def __init__(self):
         self._chunks: list[bytes] = []
@@ -56,6 +159,70 @@ class SpSerializer:
     def append_scalar(self, x) -> None:
         self.append_array(np.asarray(x))
 
+    def append_obj(self, obj: Any) -> None:
+        """Typed encoding: 1-byte tag, then a tag-specific payload.  Covers
+        None/bool/int/float/str/bytes, tuples/lists/dicts (pytrees), numpy
+        and numpy-convertible arrays, and tagged serializable objects."""
+        c = self._chunks
+        if obj is None:
+            c.append(b"N")
+        elif isinstance(obj, bool):
+            c.append(b"b\x01" if obj else b"b\x00")
+        elif isinstance(obj, int):
+            if _I64_MIN <= obj <= _I64_MAX:
+                c.append(b"I" + _I64.pack(obj))
+            else:
+                enc = str(obj).encode()
+                c.append(b"J" + _U32.pack(len(enc)) + enc)
+        elif isinstance(obj, float):
+            c.append(b"F" + _F64.pack(obj))
+        elif isinstance(obj, str):
+            enc = obj.encode()
+            c.append(b"S" + _U32.pack(len(enc)) + enc)
+        elif isinstance(obj, (bytes, bytearray, memoryview)):
+            raw = bytes(obj)
+            c.append(b"B" + _U32.pack(len(raw)) + raw)
+        elif isinstance(obj, tuple):
+            c.append(b"T" + _U32.pack(len(obj)))
+            for v in obj:
+                self.append_obj(v)
+        elif isinstance(obj, list):
+            c.append(b"L" + _U32.pack(len(obj)))
+            for v in obj:
+                self.append_obj(v)
+        elif isinstance(obj, dict):
+            c.append(b"D" + _U32.pack(len(obj)))
+            for k, v in obj.items():
+                self.append_obj(k)
+                self.append_obj(v)
+        elif isinstance(obj, (np.ndarray, np.generic)):
+            c.append(b"A")
+            self.append_array(obj)
+        elif hasattr(obj, "sp_serialize"):
+            inner = SpSerializer()
+            obj.sp_serialize(inner)
+            self._append_tagged(b"O", _wire_name(type(obj)), inner.buffer())
+        elif hasattr(obj, "comm_buffer"):
+            self._append_tagged(b"C", _wire_name(type(obj)), bytes(obj.comm_buffer()))
+        else:
+            # last resort: anything numpy can view as a numeric array
+            # (jax arrays, array-likes) travels as an array
+            a = np.asarray(obj)
+            if a.dtype == object:
+                raise TypeError(
+                    f"cannot serialize {type(obj).__name__!r} for the wire; "
+                    "use arrays/scalars/pytrees or implement sp_serialize/"
+                    "comm_buffer"
+                )
+            c.append(b"A")
+            self.append_array(a)
+
+    def _append_tagged(self, code: bytes, name: str, buf: bytes) -> None:
+        enc = name.encode()
+        self._chunks.append(
+            code + _U32.pack(len(enc)) + enc + _U32.pack(len(buf)) + buf
+        )
+
     def buffer(self) -> bytes:
         return b"".join(self._chunks)
 
@@ -65,79 +232,458 @@ class SpDeserializer:
         self._buf = buf
         self._pos = 0
 
+    def _take(self, n: int) -> bytes:
+        out = self._buf[self._pos : self._pos + n]
+        self._pos += n
+        return out
+
+    def _take_u32(self) -> int:
+        return _U32.unpack(self._take(4))[0]
+
     def next_array(self) -> np.ndarray:
-        hlen = int.from_bytes(self._buf[self._pos : self._pos + 4], "little")
-        self._pos += 4
-        header = self._buf[self._pos : self._pos + hlen].decode()
-        self._pos += hlen
+        hlen = self._take_u32()
+        header = self._take(hlen).decode()
         dtype_str, shape_str, _ = header.split("|")
         shape = tuple(int(s) for s in shape_str.split(",") if s)
         dt = np.dtype(dtype_str)
         n = int(np.prod(shape, dtype=np.int64)) * dt.itemsize if shape else dt.itemsize
-        a = np.frombuffer(self._buf[self._pos : self._pos + n], dtype=dt).reshape(shape)
-        self._pos += n
+        # .copy(): frombuffer views a read-only bytes object; consumers must
+        # be able to mutate received arrays in place
+        a = np.frombuffer(self._take(n), dtype=dt).reshape(shape).copy()
         return a
+
+    def next_obj(self) -> Any:
+        code = self._take(1)
+        if code == b"N":
+            return None
+        if code == b"b":
+            return self._take(1) == b"\x01"
+        if code == b"I":
+            return _I64.unpack(self._take(8))[0]
+        if code == b"J":
+            return int(self._take(self._take_u32()).decode())
+        if code == b"F":
+            return _F64.unpack(self._take(8))[0]
+        if code == b"S":
+            return self._take(self._take_u32()).decode()
+        if code == b"B":
+            return self._take(self._take_u32())
+        if code == b"T":
+            n = self._take_u32()
+            return tuple(self.next_obj() for _ in range(n))
+        if code == b"L":
+            n = self._take_u32()
+            return [self.next_obj() for _ in range(n)]
+        if code == b"D":
+            n = self._take_u32()
+            return {self.next_obj(): self.next_obj() for _ in range(n)}
+        if code == b"A":
+            return self.next_array()
+        if code == b"O":
+            name = self._take(self._take_u32()).decode()
+            inner = self._take(self._take_u32())
+            return resolve_wire_type(name).sp_deserialize(SpDeserializer(inner))
+        if code == b"C":
+            name = self._take(self._take_u32()).decode()
+            buf = self._take(self._take_u32())
+            return resolve_wire_type(name).from_comm_buffer(buf)
+        raise ValueError(f"corrupt wire stream: unknown type code {code!r}")
+
+
+def encode_message(obj: Any) -> bytes:
+    """Canonical wire encoding of one message (any :meth:`append_obj`-able
+    value, including :func:`pack`'s tagged tuples)."""
+    s = SpSerializer()
+    s.append_obj(obj)
+    return s.buffer()
+
+
+def decode_message(buf: bytes) -> Any:
+    return SpDeserializer(buf).next_obj()
 
 
 def pack(obj: Any) -> Any:
     """Apply the paper's three rules: (1) trivially-copyable values (arrays,
     scalars, pytrees of them) pass through; (2) objects exposing
     ``comm_buffer()`` send that buffer; (3) objects with ``sp_serialize``
-    use the serializer."""
+    use the serializer.  Tagged payloads carry the *registered type name*
+    (a string), so they survive :func:`encode_message` across processes."""
     if hasattr(obj, "sp_serialize"):
         s = SpSerializer()
         obj.sp_serialize(s)
-        return ("__serialized__", type(obj), s.buffer())
+        return ("__serialized__", _wire_name(type(obj)), s.buffer())
     if hasattr(obj, "comm_buffer"):
-        return ("__buffer__", type(obj), obj.comm_buffer())
+        return ("__buffer__", _wire_name(type(obj)), obj.comm_buffer())
     return obj  # rule 1: values are immutable — in-process "copy" is free
+
+
+def _resolve(cls_or_name) -> type:
+    # raw type objects still accepted for in-process backward compatibility
+    return resolve_wire_type(cls_or_name) if isinstance(cls_or_name, str) else cls_or_name
 
 
 def unpack(msg: Any) -> Any:
     if isinstance(msg, tuple) and len(msg) == 3 and msg[0] == "__serialized__":
         _, cls, buf = msg
-        return cls.sp_deserialize(SpDeserializer(buf))
+        return _resolve(cls).sp_deserialize(SpDeserializer(buf))
     if isinstance(msg, tuple) and len(msg) == 3 and msg[0] == "__buffer__":
         _, cls, buf = msg
-        return cls.from_comm_buffer(buf)
+        return _resolve(cls).from_comm_buffer(buf)
     return msg
 
 
 # ---------------------------------------------------------------------------
-# The in-process wire.
+# Transports.
 # ---------------------------------------------------------------------------
 
-class ChannelHub:
-    """Mailboxes keyed by (src, dst, tag)."""
+class SpTransport:
+    """Abstract wire: mailboxes keyed by ``(src, dst, tag)``.
 
-    def __init__(self):
-        self._boxes: dict[tuple, collections.deque] = collections.defaultdict(collections.deque)
-        self._lock = threading.Lock()
+    ``poll`` must be non-blocking — it is called from the comm thread's
+    test loop on every tick."""
 
     def post(self, key: tuple, msg: Any) -> None:
+        raise NotImplementedError
+
+    def post_all(self, keys: list, msg: Any) -> None:
+        """Post one message to many keys (broadcast fan-out).  Encoding
+        transports override this to serialize the payload once."""
+        for key in keys:
+            self.post(key, msg)
+
+    def poll(self, key: tuple) -> tuple[bool, Any]:
+        """Return ``(True, msg)`` if a message is queued for ``key``, else
+        ``(False, None)`` — immediately, never waiting on a peer."""
+        raise NotImplementedError
+
+    def stats(self) -> dict:
+        return {}
+
+    def reset(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+class _LockedMailboxes(SpTransport):
+    """Shared mailbox half of both transports: locked deques keyed by the
+    transport's spelling of ``(src, dst, tag)`` (:meth:`_box_key`), with
+    prune-on-drain — per-step tags (every ring collective step mints fresh
+    ones) must not leak across a training run."""
+
+    def __init__(self):
+        self._boxes: dict[tuple, collections.deque] = {}
+        self._lock = threading.Lock()
+        self._posted = 0
+        self._delivered = 0
+
+    def _box_key(self, key: tuple) -> tuple:
+        return key
+
+    def _deposit(self, boxkey: tuple, msg: Any, counter: str | None = None) -> None:
         with self._lock:
-            self._boxes[key].append(msg)
+            self._boxes.setdefault(boxkey, collections.deque()).append(msg)
+            if counter is not None:  # counted under the lock: stats must not
+                setattr(self, counter, getattr(self, counter) + 1)  # drop updates
 
     def poll(self, key: tuple):
-        """Return (True, msg) if available else (False, None)."""
+        boxkey = self._box_key(key)
         with self._lock:
-            box = self._boxes.get(key)
+            box = self._boxes.get(boxkey)
             if box:
-                return True, box.popleft()
+                msg = box.popleft()
+                if not box:  # prune: drained keys must not accumulate
+                    del self._boxes[boxkey]
+                self._delivered += 1
+                return True, msg
         return False, None
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "boxes": len(self._boxes),
+                "queued": sum(len(b) for b in self._boxes.values()),
+                "posted": self._posted,
+                "delivered": self._delivered,
+            }
+
+    def reset(self) -> None:
+        """Drop all queued messages and counters (fresh-run hygiene for
+        shared hubs, notably the module default)."""
+        with self._lock:
+            self._boxes.clear()
+            self._posted = 0
+            self._delivered = 0
+
+
+class ChannelHub(_LockedMailboxes):
+    """In-process transport: messages are live Python objects (rule 1: no
+    copy inside one process) dropped straight into the local mailboxes."""
+
+    def post(self, key: tuple, msg: Any) -> None:
+        self._deposit(key, msg, "_posted")
 
 
 _default_hub = ChannelHub()
 
 
-class SpCommGroup:
-    """A communicator: (hub, rank, size) — one per Specx 'instance'."""
+def default_hub() -> ChannelHub:
+    """The module-wide fallback hub used by :class:`SpCommGroup` when no
+    transport is passed.  Call :func:`reset_default_hub` between runs that
+    share it — undelivered messages otherwise survive into the next run."""
+    return _default_hub
 
-    def __init__(self, rank: int, size: int, hub: ChannelHub | None = None):
+
+def reset_default_hub() -> None:
+    _default_hub.reset()
+
+
+# --------------------------------------------------------------- TCP star
+
+_FRAME_HDR = struct.Struct("<III")  # src, dst, len(tag_bytes)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("peer closed the connection")
+        buf += chunk
+    return bytes(buf)
+
+
+@functools.lru_cache(maxsize=4096)
+def _tag_bytes(tag: Any) -> bytes:
+    """Canonical on-wire spelling of a tag (int / str / tuple / ...) —
+    both ends derive mailbox keys from this, so any encodable tag matches.
+    Memoized: the comm thread re-polls pending receives every tick, and
+    re-encoding the same tag thousands of times per second is pure waste
+    (tags are hashable by construction — they already key mailbox dicts)."""
+    return encode_message(tag)
+
+
+class _Router(threading.Thread):
+    """Rank 0's frame switch: accepts one connection per rank (hello = the
+    4-byte rank), then forwards every ``[len][src][dst][taglen][tag][payload]``
+    frame to ``dst``'s connection verbatim.  Forwarding starts only once all
+    ``size`` ranks have dialed in; frames written earlier sit in kernel
+    socket buffers until then."""
+
+    def __init__(self, host: str, port: int, size: int):
+        super().__init__(name="sprouter", daemon=True)
+        self._size = size
+        self._listener = socket.create_server((host, port), backlog=size)
+        self.port = self._listener.getsockname()[1]
+        self._conns: dict[int, socket.socket] = {}
+        self._send_locks: dict[int, threading.Lock] = {}
+        self._fwd_lock = threading.Lock()
+        self.forwarded = 0
+
+    def run(self) -> None:
+        try:
+            while len(self._conns) < self._size:
+                conn, _addr = self._listener.accept()
+                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                (rank,) = _U32.unpack(_recv_exact(conn, 4))
+                if rank in self._conns:  # protocol breach: duplicate hello
+                    warnings.warn(
+                        f"router: duplicate hello for rank {rank}; "
+                        "dropping the new connection",
+                        RuntimeWarning,
+                    )
+                    conn.close()
+                    continue
+                self._conns[rank] = conn
+                self._send_locks[rank] = threading.Lock()
+        except (ConnectionError, OSError) as e:
+            # a rank died mid-rendezvous: the job cannot form — fail loudly
+            # instead of leaving a half-dead router thread behind
+            warnings.warn(
+                f"router: rendezvous failed ({e!r}); closing all connections",
+                RuntimeWarning,
+            )
+            for c in self._conns.values():
+                c.close()
+            self._listener.close()
+            return
+        self._listener.close()
+        readers = [
+            threading.Thread(
+                target=self._forward_from, args=(r,), name=f"sproute-{r}", daemon=True
+            )
+            for r in self._conns
+        ]
+        for t in readers:
+            t.start()
+        for t in readers:
+            t.join()
+
+    def _forward_from(self, rank: int) -> None:
+        conn = self._conns[rank]
+        try:
+            while True:
+                head = _recv_exact(conn, 4)
+                (n,) = _U32.unpack(head)
+                body = _recv_exact(conn, n)
+                dst = _FRAME_HDR.unpack_from(body, 0)[1]
+                out = self._conns.get(dst)
+                if out is None:
+                    continue
+                with self._send_locks[dst]:
+                    out.sendall(head + body)
+                with self._fwd_lock:
+                    self.forwarded += 1
+        except (ConnectionError, OSError):
+            pass  # rank hung up; in-flight traffic for it is already queued
+        finally:
+            try:
+                conn.close()
+            except OSError:  # pragma: no cover - already closed
+                pass
+
+
+class SocketTransport(_LockedMailboxes):
+    """Cross-process TCP transport (the ROADMAP's multi-host ChannelHub).
+
+    Star topology over a localhost (or LAN) rendezvous: rank 0 binds
+    ``port`` and runs the :class:`_Router`; every rank dials it.  ``post``
+    encodes the message with the canonical wire codec and writes one frame;
+    a dedicated receiver thread drains the socket into local mailboxes, so
+    ``poll`` is a pure dict lookup — non-blocking, as the comm thread's
+    test loop requires."""
+
+    def __init__(
+        self,
+        rank: int,
+        size: int,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        connect_timeout: float = 10.0,
+    ):
+        super().__init__()
+        self.rank, self.size, self.host = rank, size, host
+        self._received = 0
+        self._closed = False
+        self._router: Optional[_Router] = None
+        if rank == 0:
+            self._router = _Router(host, port, size)
+            self._router.start()
+            port = self._router.port
+        elif port == 0:
+            raise ValueError("non-root ranks must be told the rendezvous port")
+        self.port = port
+
+        deadline = time.monotonic() + connect_timeout
+        while True:  # rank 0 may not be listening yet — dial until it is
+            try:
+                self._sock = socket.create_connection((host, port), timeout=connect_timeout)
+                break
+            except OSError:
+                if time.monotonic() > deadline:
+                    raise
+                time.sleep(0.02)
+        # create_connection leaves connect_timeout armed on the socket;
+        # clear it or an idle gap longer than that kills the receiver
+        # thread with a swallowed socket.timeout (an OSError subclass)
+        self._sock.settimeout(None)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._sock.sendall(_U32.pack(rank))  # hello
+        self._wlock = threading.Lock()
+        self._reader = threading.Thread(
+            target=self._recv_loop, name=f"sprecv-{rank}", daemon=True
+        )
+        self._reader.start()
+
+    # -- wire side (receiver thread only) ------------------------------------
+
+    def _recv_loop(self) -> None:
+        try:
+            while True:
+                (n,) = _U32.unpack(_recv_exact(self._sock, 4))
+                body = _recv_exact(self._sock, n)
+                src, _dst, taglen = _FRAME_HDR.unpack_from(body, 0)
+                off = _FRAME_HDR.size
+                tag_b = body[off : off + taglen]
+                msg = decode_message(body[off + taglen :])
+                self._deposit((src, self.rank, tag_b), msg, "_received")
+        except (ConnectionError, OSError):
+            pass  # transport closed (ours or the router's)
+
+    # -- mailbox side ---------------------------------------------------------
+
+    def _box_key(self, key: tuple) -> tuple:
+        src, dst, tag = key
+        return (src, dst, _tag_bytes(tag))
+
+    def _send_frame(self, key: tuple, payload: bytes) -> None:
+        src, dst, tag = key
+        tag_b = _tag_bytes(tag)
+        body = _FRAME_HDR.pack(src, dst, len(tag_b)) + tag_b + payload
+        with self._wlock:
+            self._sock.sendall(_U32.pack(len(body)) + body)
+            self._posted += 1
+
+    def post(self, key: tuple, msg: Any) -> None:
+        self._send_frame(key, encode_message(msg))
+
+    def post_all(self, keys: list, msg: Any) -> None:
+        # broadcast fan-out: serialize once, frame per destination
+        payload = encode_message(msg)
+        for key in keys:
+            self._send_frame(key, payload)
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out["received"] = self._received
+        return out
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+        self._reader.join(timeout=2.0)
+        if self._router is not None:
+            self._router.join(timeout=2.0)
+
+    def __enter__(self) -> "SocketTransport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class SpCommGroup:
+    """A communicator: (transport, rank, size) — one per Specx 'instance'.
+
+    ``hub`` may be any :class:`SpTransport`; the in-process default is the
+    module-wide :func:`default_hub`.  ``default_timeout`` (seconds) applies
+    to every receive issued through this group unless the call overrides it."""
+
+    def __init__(
+        self,
+        rank: int,
+        size: int,
+        hub: SpTransport | None = None,
+        *,
+        default_timeout: float | None = None,
+    ):
         self.rank = rank
         self.size = size
-        self.hub = hub or _default_hub
+        self.hub = hub if hub is not None else default_hub()
+        self.default_timeout = default_timeout
         self._bcast_seq = 0  # paper: same broadcasts, same order on all ranks
+
+    @property
+    def transport(self) -> SpTransport:
+        return self.hub
 
 
 # ---------------------------------------------------------------------------
@@ -147,6 +693,12 @@ class SpCommGroup:
 class CommRequest:
     def test(self) -> bool:
         raise NotImplementedError
+
+    def timed_out(self) -> bool:
+        return False
+
+    def timeout_error(self) -> SpCommError:  # pragma: no cover - overridden
+        return SpCommTimeoutError("communication request timed out")
 
     def complete(self) -> None:
         pass
@@ -158,20 +710,36 @@ class _DoneRequest(CommRequest):
 
 
 class _RecvRequest(CommRequest):
-    def __init__(self, hub: ChannelHub, key: tuple, ref):
-        self.hub = hub
+    def __init__(self, transport: SpTransport, key: tuple, ref, timeout: float | None = None):
+        self.transport = transport
         self.key = key
         self.ref = ref
         self._msg = None
         self._have = False
+        self._deadline = None if timeout is None else time.monotonic() + timeout
+        self._timeout = timeout
 
     def test(self) -> bool:
         if not self._have:
-            ok, msg = self.hub.poll(self.key)
+            ok, msg = self.transport.poll(self.key)
             if ok:
                 self._msg = msg
                 self._have = True
         return self._have
+
+    def timed_out(self) -> bool:
+        return (
+            not self._have
+            and self._deadline is not None
+            and time.monotonic() > self._deadline
+        )
+
+    def timeout_error(self) -> SpCommError:
+        src, dst, tag = self.key
+        return SpCommTimeoutError(
+            f"recv(src={src}, dst={dst}, tag={tag!r}) saw no message within "
+            f"{self._timeout}s — peer never posted?"
+        )
 
     def complete(self) -> None:
         self.ref.value = unpack(self._msg)
@@ -189,7 +757,7 @@ def _no_spec(graph: SpTaskGraph) -> None:
         )
 
 
-def mpi_send(graph: SpTaskGraph, group: SpCommGroup, x: SpData, dest: int, tag: int) -> TaskView:
+def mpi_send(graph: SpTaskGraph, group: SpCommGroup, x: SpData, dest: int, tag) -> TaskView:
     _no_spec(graph)
     acc = SpAccess(x, AccessMode.READ)
     task = Task({"ref": lambda v: None}, [acc], [("single", acc)],
@@ -203,26 +771,43 @@ def mpi_send(graph: SpTaskGraph, group: SpCommGroup, x: SpData, dest: int, tag: 
     return graph._insert(task)
 
 
-def mpi_recv(graph: SpTaskGraph, group: SpCommGroup, x: SpData, src: int, tag: int) -> TaskView:
+def mpi_recv(
+    graph: SpTaskGraph,
+    group: SpCommGroup,
+    x: SpData,
+    src: int,
+    tag,
+    *,
+    timeout: float | None = None,
+) -> TaskView:
     _no_spec(graph)
+    eff_timeout = timeout if timeout is not None else group.default_timeout
     acc = SpAccess(x, AccessMode.WRITE)
     task = Task({"ref": lambda v: None}, [acc], [("single", acc)],
                 name=f"recv(from={src},tag={tag})", is_comm=True, cost=0.1)
 
     def start(args):
-        return _RecvRequest(group.hub, (src, group.rank, tag), args[0])
+        return _RecvRequest(group.hub, (src, group.rank, tag), args[0], eff_timeout)
 
     task.comm_start = start
     return graph._insert(task)
 
 
-def mpi_broadcast(graph: SpTaskGraph, group: SpCommGroup, x: SpData, root: int) -> TaskView:
+def mpi_broadcast(
+    graph: SpTaskGraph,
+    group: SpCommGroup,
+    x: SpData,
+    root: int,
+    *,
+    timeout: float | None = None,
+) -> TaskView:
     """Paper: Specx supports MPI broadcast; all instances must issue the same
     broadcasts in the same order — enforced via a per-group sequence tag."""
     _no_spec(graph)
     seq = group._bcast_seq
     group._bcast_seq += 1
     tag = ("bcast", seq)
+    eff_timeout = timeout if timeout is not None else group.default_timeout
     if group.rank == root:
         acc = SpAccess(x, AccessMode.READ)
         task = Task({"ref": lambda v: None}, [acc], [("single", acc)],
@@ -230,9 +815,9 @@ def mpi_broadcast(graph: SpTaskGraph, group: SpCommGroup, x: SpData, root: int) 
 
         def start(args):
             msg = pack(args[0])
-            for r in range(group.size):
-                if r != root:
-                    group.hub.post((root, r, tag), msg)
+            group.hub.post_all(
+                [(root, r, tag) for r in range(group.size) if r != root], msg
+            )
             return _DoneRequest()
 
         task.comm_start = start
@@ -242,7 +827,7 @@ def mpi_broadcast(graph: SpTaskGraph, group: SpCommGroup, x: SpData, root: int) 
                     name=f"bcast(root={root},seq={seq})", is_comm=True, cost=0.1)
 
         def start(args):
-            return _RecvRequest(group.hub, (root, group.rank, tag), args[0])
+            return _RecvRequest(group.hub, (root, group.rank, tag), args[0], eff_timeout)
 
         task.comm_start = start
     return graph._insert(task)
@@ -254,7 +839,14 @@ def mpi_broadcast(graph: SpTaskGraph, group: SpCommGroup, x: SpData, root: int) 
 
 class CommThread(threading.Thread):
     """Starts non-blocking ops and polls a request list — the analogue of the
-    paper's MPI thread calling test-any in a loop."""
+    paper's MPI thread calling test-any in a loop.
+
+    Lifecycle: :meth:`stop` first waits ``grace`` seconds for in-flight
+    requests to drain; if the loop is still busy after that, it *aborts*
+    the remaining requests — each affected task fails with
+    :class:`SpCommAbortedError` (so waiters unblock and see the error) and
+    ``stop`` returns their names instead of silently leaking a daemon
+    thread with live requests."""
 
     _ids = iter(range(1 << 20))
 
@@ -264,63 +856,158 @@ class CommThread(threading.Thread):
         self._incoming: collections.deque[Task] = collections.deque()
         self._cv = threading.Condition()
         self._running = True
+        self._abort = False
+        self.aborted: list[str] = []
 
     def submit(self, task: Task) -> None:
         with self._cv:
             self._incoming.append(task)
             self._cv.notify()
 
+    def _cancel_cascade(self, tasks: list) -> None:
+        """Transitively cancel released successors: used whenever work
+        becomes ready but no worker will ever run it (engine stopped, or
+        the request it depended on was aborted) — otherwise
+        ``wait_all_tasks`` hangs forever on any chain behind a dead comm
+        task."""
+        stack = list(tasks)
+        while stack:
+            t = stack.pop()
+            t.mark_cancelled()
+            g = getattr(t, "graph", None)
+            if g is not None:
+                stack.extend(g.on_task_finished(t))
+
+    def _complete(self, task: Task, *, dispatch: bool) -> None:
+        """Common completion path: stamp the end time, trace, release
+        dependencies, wake waiters.  Successors are dispatched only for a
+        *successful* request on a still-running engine; a failed request
+        (timeout, start error, abort) cancels them transitively instead —
+        their input never arrived, running them would silently propagate
+        garbage — and so does a completion landing inside ``stop()``'s
+        grace window, when no worker is left to pop the queue."""
+        task.t_end = time.perf_counter()
+        graph = getattr(task, "graph", None)
+        if graph is None:  # pragma: no cover - tasks always carry a graph
+            task.mark_finished()
+            return
+        if getattr(graph, "trace", True):
+            graph.trace_events.append(
+                {
+                    "task": task.name,
+                    "uid": task.uid,
+                    "worker": self.name,
+                    "t0": task.t_start,
+                    "t1": task.t_end,
+                    "ready": 0,
+                    "comm": True,
+                    "spec": False,
+                }
+            )
+        newly = graph.on_task_finished(task)
+        task.mark_finished()
+        if newly:
+            if dispatch and getattr(self.engine, "_running", True):
+                self.engine.push_many(newly)
+            else:
+                self._cancel_cascade(newly)
+
+    def _finish(self, task: Task) -> None:
+        self._complete(task, dispatch=True)
+
+    def _fail(self, task: Task, exc: BaseException) -> None:
+        task.exception = exc
+        self._complete(task, dispatch=False)
+
     def run(self) -> None:
         in_flight: list[tuple[Task, CommRequest, list]] = []
         while True:
+            starts: list[Task] = []
             with self._cv:
+                if self._abort:
+                    break
                 if not self._running and not self._incoming and not in_flight:
                     return
                 while self._incoming:
-                    task = self._incoming.popleft()
-                    task.state = TaskState.RUNNING
-                    task.t_start = time.perf_counter()
-                    args, writebacks = task.build_args()
-                    req = task.comm_start(args)
-                    in_flight.append((task, req, writebacks))
-                if not in_flight and self._running:
+                    starts.append(self._incoming.popleft())
+                if not in_flight and not starts and self._running:
                     self._cv.wait(timeout=0.05)
                     continue
+            # start requests OUTSIDE the lock: a socket send can block on a
+            # full kernel buffer, and _fail releases dependencies, which may
+            # re-enter submit() — neither may happen while holding _cv
+            for task in starts:
+                task.state = TaskState.RUNNING
+                task.t_start = time.perf_counter()
+                try:
+                    args, writebacks = task.build_args()
+                    req = task.comm_start(args)
+                except BaseException as e:
+                    self._fail(task, e)
+                    continue
+                in_flight.append((task, req, writebacks))
             progressed = False
             for item in list(in_flight):
                 task, req, writebacks = item
-                if req.test():
+                try:
+                    done = req.test()
+                except BaseException as e:
+                    self._fail(task, e)
+                    in_flight.remove(item)
+                    progressed = True
+                    continue
+                if done:
                     req.complete()
                     for acc, ref in writebacks:
                         acc.data.value = ref.value
-                    task.t_end = time.perf_counter()
-                    graph = getattr(task, "graph", None)
-                    if graph is not None:
-                        if getattr(graph, "trace", True):
-                            graph.trace_events.append(
-                                {
-                                    "task": task.name,
-                                    "uid": task.uid,
-                                    "worker": self.name,
-                                    "t0": task.t_start,
-                                    "t1": task.t_end,
-                                    "ready": 0,
-                                    "comm": True,
-                                    "spec": False,
-                                }
-                            )
-                        newly = graph.on_task_finished(task)
-                        task.mark_finished()
-                        self.engine.push_many(newly)
-                    else:  # pragma: no cover
-                        task.mark_finished()
+                    self._finish(task)
+                    in_flight.remove(item)
+                    progressed = True
+                elif req.timed_out():
+                    self._fail(task, req.timeout_error())
                     in_flight.remove(item)
                     progressed = True
             if not progressed and in_flight:
                 time.sleep(0.0005)
+        # abort path: fail whatever is still queued or in flight so waiters
+        # unblock and stop() can report it
+        with self._cv:
+            pending = list(self._incoming)
+            self._incoming.clear()
+        for task, _req, _wb in in_flight:
+            self.aborted.append(task.name)
+            self._fail(task, SpCommAbortedError(
+                f"comm thread stopped with {task.name!r} still in flight"))
+        for task in pending:
+            self.aborted.append(task.name)
+            task.t_start = task.t_start or time.perf_counter()
+            self._fail(task, SpCommAbortedError(
+                f"comm thread stopped before {task.name!r} started"))
 
-    def stop(self) -> None:
+    def stop(self, grace: float = 2.0) -> list[str]:
+        """Stop the thread; returns the names of aborted tasks ([] when the
+        loop drained cleanly within ``grace`` seconds)."""
+        was_alive = self.is_alive()
         with self._cv:
             self._running = False
             self._cv.notify()
-        self.join(timeout=5.0)
+        self.join(timeout=grace)
+        if self.is_alive():
+            with self._cv:
+                self._abort = True
+                self._cv.notify()
+            self.join(timeout=2.0)
+        if self.aborted and was_alive:
+            warnings.warn(
+                f"CommThread stopped with in-flight requests aborted: "
+                f"{self.aborted}",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        if self.is_alive():  # pragma: no cover - stuck in a blocking send
+            warnings.warn(
+                "CommThread failed to exit within the grace period",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        return list(self.aborted)

@@ -355,7 +355,38 @@ class SpComputeEngine:
 
     # ------------------------------------------------------------------ stop
 
-    def stop(self) -> None:
+    def _drain_cancel_leftovers(self) -> int:
+        """Cancel tasks still queued after the workers are gone — work
+        pushed in the stop() race window (or released by the comm thread's
+        grace period) would otherwise strand ``wait_all_tasks`` forever.
+        Successors released by the cancellations are cancelled too."""
+        stack: list[Task] = []
+        while True:
+            if self._pop_by_name:
+                t = self.scheduler.pop("ref", "__drain__")
+            else:
+                t = self.scheduler.pop("ref")
+            if t is None:
+                break
+            stack.append(t)
+        n = 0
+        while stack:
+            t = stack.pop()
+            if t.is_done:  # pragma: no cover - raced with a live worker
+                continue
+            t.mark_cancelled()
+            n += 1
+            graph = getattr(t, "graph", None)
+            if graph is not None:
+                stack.extend(graph.on_task_finished(t))
+        return n
+
+    def stop(self) -> list[str]:
+        """Stop workers, then the comm thread, then cancel any stranded
+        queued tasks.  Returns the names of comm tasks whose requests had
+        to be aborted (empty in a clean shutdown); those tasks carry an
+        ``SpCommAbortedError`` so their waiters see a real error instead of
+        hanging on a leaked daemon thread."""
         with self._lock:
             self._running = False
             workers = list(self._workers)
@@ -367,8 +398,11 @@ class SpComputeEngine:
         for w in workers:
             if w is not me:
                 w.join(timeout=5.0)
+        aborted: list[str] = []
         if self._comm is not None:
-            self._comm.stop()
+            aborted = self._comm.stop()
+        self._drain_cancel_leftovers()
+        return aborted
 
     stopIfNotAlreadyStopped = stop
 

@@ -15,13 +15,25 @@ that story adapted to the JAX substrate (DESIGN.md §2/§5), split in three:
 
 * :mod:`repro.dist.collectives` — task-graph collectives (paper §4.4): ring
   :func:`all_reduce` / :func:`all_gather` built from ``mpi_send`` /
-  ``mpi_recv`` communication tasks over a :class:`~repro.core.ChannelHub`,
+  ``mpi_recv`` communication tasks over any :class:`~repro.core.SpTransport`,
   so the reduce-scatter/all-gather pipeline is *visible to the scheduler* as
-  ordinary dependencies; :func:`hierarchical_psum` (intra-pod reduce-scatter
-  → inter-pod all-reduce → intra-pod all-gather) for the staged backend,
-  where collectives lower to ``jax.lax`` ops instead; and gradient
-  compression (:func:`compress_int8` / :func:`compress_tree` with
-  error-feedback residuals) to cut the bytes those collectives move.
+  ordinary dependencies.  Two transports ship: the in-process
+  :class:`~repro.core.ChannelHub` (rank-tagged graphs inside one process,
+  live-object mailboxes) and the cross-process
+  :class:`~repro.core.SocketTransport` (one OS process per rank; rank 0
+  binds a localhost rendezvous port and routes length-prefixed
+  ``(src, dst, tag)``-keyed frames; payloads travel through the canonical
+  wire codec, ``repro.core.encode_message``).  Both drive the *same*
+  non-blocking start/test protocol on the comm thread — receives poll local
+  mailboxes, never a socket — and both honor ``mpi_recv(timeout=...)``,
+  which fails a never-matched receive with ``SpCommTimeoutError`` instead
+  of spinning forever.  ``launch/rendezvous.py`` is the multi-process
+  bootstrap (spawn ranks, share the port, reduce over real TCP).
+  :func:`hierarchical_psum` (intra-pod reduce-scatter → inter-pod
+  all-reduce → intra-pod all-gather) covers the staged backend, where
+  collectives lower to ``jax.lax`` ops instead; gradient compression
+  (:func:`compress_int8` / :func:`compress_tree` with error-feedback
+  residuals) cuts the bytes those collectives move.
 
 * :mod:`repro.dist.fault` — fault tolerance on top of the engine's
   cancellation hooks (paper §4.2 dynamic worker teams are the recovery

@@ -2,14 +2,20 @@
 
 Two execution substrates, one API:
 
-* **Eager / hub** — :func:`ring_all_reduce` and :func:`ring_all_gather`
+* **Eager / transport** — :func:`ring_all_reduce` and :func:`ring_all_gather`
   build the textbook ring pipelines out of ``mpi_send`` / ``mpi_recv``
-  *communication tasks* over a :class:`~repro.core.ChannelHub`.  Every
-  chunk hop is an ordinary graph node, so the scheduler sees (and can
-  overlap) the whole reduce-scatter/all-gather pipeline — the paper's
-  "communications are incorporated into the task graph", extended from
-  point-to-point to collectives the way DuctTeip layers distributed
-  reductions over local task scheduling.
+  *communication tasks* over whatever :class:`~repro.core.SpTransport` the
+  :class:`~repro.core.SpCommGroup` carries — the in-process
+  :class:`~repro.core.ChannelHub` (rank-tagged graphs inside one process)
+  or the cross-process :class:`~repro.core.SocketTransport` (one OS
+  process per rank over a TCP rendezvous, ``launch/rendezvous.py``).  The
+  collectives are transport-agnostic: every value they put on the wire is
+  an array/pytree the canonical wire codec encodes, and every chunk hop is
+  an ordinary graph node, so the scheduler sees (and can overlap) the
+  whole reduce-scatter/all-gather pipeline — the paper's "communications
+  are incorporated into the task graph", extended from point-to-point to
+  collectives the way DuctTeip layers distributed reductions over local
+  task scheduling.
 
 * **Staged** — inside ``shard_map``/``jit`` the same reductions lower to
   ``jax.lax`` collectives; :func:`hierarchical_psum` is the pod-aware
@@ -91,10 +97,13 @@ def ring_all_reduce(
 ) -> TaskView:
     """Insert a chunked ring all-reduce for ``x`` into ``graph``.
 
-    Every rank calls this with its own (graph, group, cell); the hub wires
-    the rings together.  ``x.value`` is replaced by the reduced array; the
-    returned view's value is the same array.  ``op`` is ``"sum"`` or
-    ``"mean"``.  2·(S−1) hops per chunk — bandwidth-optimal.
+    Every rank calls this with its own (graph, group, cell); the group's
+    transport wires the rings together — in-process mailboxes or TCP
+    sockets, same task graph either way.  ``x.value`` is replaced by the
+    reduced array; the returned view's value is the same array.  ``op`` is
+    ``"sum"`` or ``"mean"``.  2·(S−1) hops per chunk — bandwidth-optimal.
+    Re-issuing with a fresh ``tag`` per step is safe: drained mailboxes are
+    pruned by the transport, so per-step keys do not accumulate.
     """
     if op not in ("sum", "mean"):
         raise ValueError(f"unsupported op {op!r}; use 'sum' or 'mean'")

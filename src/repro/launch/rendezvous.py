@@ -1,0 +1,185 @@
+"""Multi-process rank bootstrap for the socket transport (paper §4.4).
+
+This is the ``launch``-side of the ROADMAP's "Multi-host ChannelHub": spin
+up one OS process per rank, hand each a
+:class:`~repro.core.comm.SocketTransport` dialed into a shared localhost
+rendezvous (rank 0 binds the port and runs the frame router; every rank —
+including rank 0 — connects to it), and drive the *same* non-blocking
+comm-task protocol that the in-process :class:`~repro.core.comm.ChannelHub`
+exercises — ``ring_all_reduce`` built from ``mpi_send`` / ``mpi_recv``
+tasks, progressed by each process's comm thread.
+
+Demo / measurement entry point::
+
+    PYTHONPATH=src python -m repro.launch.rendezvous --size 2 --n 65536
+
+spawns the ranks with :mod:`multiprocessing` (spawn context: no inherited
+JAX/threading state), reduces a float32 vector over TCP, checks the result
+against the NumPy reference bit-for-bit, and prints per-rank wall time —
+the measured two-process result tracked in ROADMAP.md.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import queue as _queue
+import time
+from typing import Any
+
+__all__ = ["bootstrap_transport", "run_ring_reduce"]
+
+
+def bootstrap_transport(
+    rank: int,
+    size: int,
+    *,
+    port: int,
+    host: str = "127.0.0.1",
+    timeout: float = 30.0,
+):
+    """Create this rank's :class:`SocketTransport`: rank 0 binds ``port``
+    and routes, everyone dials (retrying until rank 0 is listening)."""
+    from repro.core.comm import SocketTransport
+
+    return SocketTransport(rank, size, host=host, port=port, connect_timeout=timeout)
+
+
+def _ring_worker(rank: int, size: int, port: int, n: int, steps: int, q, port_q=None) -> None:
+    """One rank: build engine + graph, all-reduce ``steps`` times over TCP
+    (sum first, then mean on a fresh cell), report values + transport stats.
+    Rank 0 binds an OS-assigned port (``port=0``) and reports it on
+    ``port_q`` — no pick-then-rebind race for the rendezvous port."""
+    import numpy as np
+
+    from repro.core import (
+        SpCommGroup,
+        SpComputeEngine,
+        SpData,
+        SpTaskGraph,
+        SpWorkerTeamBuilder,
+    )
+    from repro.dist.collectives import ring_all_reduce
+
+    transport = bootstrap_transport(rank, size, port=port)
+    if rank == 0 and port_q is not None:
+        port_q.put(transport.port)
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(2))
+    try:
+        group = SpCommGroup(rank, size, transport, default_timeout=60.0)
+        tg = SpTaskGraph(trace=False).compute_on(eng)
+        rng = np.random.default_rng(rank)
+        base = rng.standard_normal(n).astype(np.float32)
+
+        t0 = time.perf_counter()
+        x = SpData(base.copy(), f"sum{rank}")
+        for step in range(steps):
+            if step:  # re-reduce the previous result: distinct per-step tags
+                x.value = base.copy()
+            ring_all_reduce(tg, group, x, op="sum", tag=step)
+            tg.wait_all_tasks()
+        wall_sum = time.perf_counter() - t0
+
+        y = SpData(base.copy(), f"mean{rank}")
+        ring_all_reduce(tg, group, y, op="mean", tag=steps)
+        tg.wait_all_tasks()
+
+        q.put((rank, x.value, y.value, wall_sum / steps, transport.stats()))
+    finally:
+        eng.stop()
+        transport.close()
+
+
+def run_ring_reduce(
+    size: int = 2,
+    n: int = 4099,
+    *,
+    steps: int = 1,
+    timeout: float = 120.0,
+) -> dict:
+    """Spawn ``size`` rank processes, ring-all-reduce a ``float32[n]`` over
+    the TCP transport ``steps`` times (plus one mean reduce), and return
+    ``{rank: {"sum", "mean", "wall_s", "stats"}}``.  ``n`` defaults to a
+    size-indivisible length so chunking is exercised."""
+    ctx = mp.get_context("spawn")
+    q: Any = ctx.Queue()
+    port_q: Any = ctx.Queue()
+    # rank 0 binds port 0 and tells us the real port before peers dial —
+    # the parent never picks a port it cannot hold
+    procs = [
+        ctx.Process(
+            target=_ring_worker, args=(0, size, 0, n, steps, q, port_q), daemon=True
+        )
+    ]
+    procs[0].start()
+    try:
+        port = port_q.get(timeout=timeout)
+    except _queue.Empty:
+        procs[0].terminate()
+        raise TimeoutError(f"rank 0 did not bind a rendezvous port within {timeout}s")
+    for r in range(1, size):
+        p = ctx.Process(
+            target=_ring_worker, args=(r, size, port, n, steps, q), daemon=True
+        )
+        procs.append(p)
+        p.start()
+    results: dict[int, dict] = {}
+    deadline = time.monotonic() + timeout
+    try:
+        while len(results) < size and time.monotonic() < deadline:
+            try:
+                rank, s, m, wall, stats = q.get(timeout=1.0)
+            except _queue.Empty:
+                if any(p.exitcode not in (None, 0) for p in procs):
+                    raise RuntimeError(
+                        "a rank process died: "
+                        + str([(p.name, p.exitcode) for p in procs])
+                    )
+                continue
+            results[rank] = {"sum": s, "mean": m, "wall_s": wall, "stats": stats}
+    finally:
+        for p in procs:
+            p.join(timeout=10.0)
+            if p.is_alive():  # pragma: no cover - hung rank
+                p.terminate()
+    if len(results) < size:
+        raise TimeoutError(
+            f"only {len(results)}/{size} ranks reported within {timeout}s"
+        )
+    return results
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    import numpy as np
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--size", type=int, default=2)
+    ap.add_argument("--n", type=int, default=65536)
+    ap.add_argument("--steps", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    results = run_ring_reduce(args.size, args.n, steps=args.steps)
+    arrays = [
+        np.random.default_rng(r).standard_normal(args.n).astype(np.float32)
+        for r in range(args.size)
+    ]
+    expected = arrays[0]
+    for a in arrays[1:]:
+        expected = expected + a
+    for rank, res in sorted(results.items()):
+        # at size 2 each element is a single float32 addition: bit-for-bit
+        match = (
+            bool(np.array_equal(res["sum"], expected))
+            if args.size == 2
+            else bool(np.allclose(res["sum"], expected, rtol=1e-5, atol=1e-6))
+        )
+        print(
+            f"[rank {rank}] allreduce float32[{args.n}] x{args.steps}: "
+            f"{res['wall_s'] * 1e3:.1f} ms/step, "
+            f"{'bitexact' if args.size == 2 else 'allclose'}={match}, "
+            f"transport={res['stats']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -19,8 +19,11 @@ EXPECTED = sorted([
     "SpReadArray", "SpWrite", "SpWriteArray", "SpWriteRef",
     # impl variants
     "SpCpu", "SpCuda", "SpHip", "SpHost", "SpImpl", "SpPallas", "SpRef",
-    # comm
-    "ChannelHub", "SpCommGroup", "SpDeserializer", "SpSerializer",
+    # comm (PR 5: transport split + wire codec)
+    "ChannelHub", "SocketTransport", "SpTransport", "SpCommGroup",
+    "SpCommError", "SpCommTimeoutError", "SpCommAbortedError",
+    "SpDeserializer", "SpSerializer", "decode_message", "default_hub",
+    "encode_message", "register_wire_type", "reset_default_hub",
     "mpi_broadcast", "mpi_recv", "mpi_send",
     # engine / graph / runtime
     "SpComputeEngine", "SpWorker", "SpWorkerTeam", "SpWorkerTeamBuilder",

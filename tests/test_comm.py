@@ -1,12 +1,18 @@
-"""Communication tasks + background progress thread (paper §4.4)."""
+"""Communication tasks + background progress thread (paper §4.4): the
+in-process transport, the canonical wire codec, recv timeouts, and the
+comm-thread shutdown contract."""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 import pytest
 
 from repro.core import (
     ChannelHub,
+    SpCommAbortedError,
     SpCommGroup,
+    SpCommTimeoutError,
     SpComputeEngine,
     SpData,
     SpDeserializer,
@@ -15,9 +21,13 @@ from repro.core import (
     SpTaskGraph,
     SpWorkerTeamBuilder,
     SpWrite,
+    decode_message,
+    default_hub,
+    encode_message,
     mpi_broadcast,
     mpi_recv,
     mpi_send,
+    reset_default_hub,
 )
 
 
@@ -103,3 +113,194 @@ def test_matrix_object_send_recv(engine):
     tg1.wait_all_tasks()
     assert isinstance(r.value, Matrix)
     np.testing.assert_array_equal(r.value.values, np.eye(3) * 2)
+
+
+# ---------------------------------------------------------------------------
+# canonical wire codec (the socket transport's encoding)
+# ---------------------------------------------------------------------------
+
+def test_wire_codec_roundtrips_pytrees():
+    msg = {
+        "arr": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "nested": (1, [2.5, "text", None, True, b"\x00\xff"], {"k": -7}),
+        "big": 1 << 80,
+        "scalar": np.float64(3.25),
+    }
+    out = decode_message(encode_message(msg))
+    np.testing.assert_array_equal(out["arr"], msg["arr"])
+    assert out["nested"] == (1, [2.5, "text", None, True, b"\x00\xff"], {"k": -7})
+    assert out["big"] == 1 << 80
+    assert out["scalar"] == 3.25
+    # tuples stay tuples and lists stay lists (tags embed tuples as keys)
+    assert isinstance(out["nested"], tuple) and isinstance(out["nested"][1], list)
+
+
+def test_wire_codec_rejects_unencodable():
+    with pytest.raises(TypeError, match="cannot serialize"):
+        encode_message({"fn": lambda: None})
+
+
+def test_deserialized_arrays_are_writable():
+    # regression: np.frombuffer views over bytes are read-only; consumers
+    # mutating a received array in place used to get ValueError
+    s = SpSerializer()
+    s.append_array(np.arange(6, dtype=np.float32))
+    a = SpDeserializer(s.buffer()).next_array()
+    a += 1.0  # must not raise
+    np.testing.assert_array_equal(a, np.arange(6, dtype=np.float32) + 1.0)
+    b = decode_message(encode_message(np.zeros((2, 2))))
+    b[0, 0] = 5.0
+    assert b[0, 0] == 5.0
+
+
+# ---------------------------------------------------------------------------
+# mailbox hygiene (leak regressions)
+# ---------------------------------------------------------------------------
+
+def test_hub_prunes_drained_mailboxes():
+    hub = ChannelHub()
+    for step in range(50):  # per-step tags: the unbounded-growth pattern
+        hub.post((0, 1, ("step", step)), step)
+        ok, msg = hub.poll((0, 1, ("step", step)))
+        assert ok and msg == step
+    st = hub.stats()
+    assert st["boxes"] == 0 and st["queued"] == 0
+    assert st["posted"] == 50 and st["delivered"] == 50
+    assert len(hub._boxes) == 0
+
+
+def test_hub_keeps_unread_messages():
+    hub = ChannelHub()
+    hub.post((0, 1, "a"), 1)
+    hub.post((0, 1, "a"), 2)
+    ok, msg = hub.poll((0, 1, "a"))
+    assert ok and msg == 1
+    assert hub.stats()["boxes"] == 1  # still one queued message
+    ok, msg = hub.poll((0, 1, "a"))
+    assert ok and msg == 2
+    assert hub.stats()["boxes"] == 0
+
+
+def test_default_hub_reset():
+    hub = default_hub()
+    assert SpCommGroup(0, 2).hub is hub  # no-transport groups share it
+    hub.post((0, 1, "stale"), "leftover")
+    assert hub.stats()["queued"] >= 1
+    reset_default_hub()
+    st = hub.stats()
+    assert st == {"boxes": 0, "queued": 0, "posted": 0, "delivered": 0}
+
+
+# ---------------------------------------------------------------------------
+# timeout + shutdown semantics
+# ---------------------------------------------------------------------------
+
+def test_recv_timeout_surfaces_as_task_exception(engine):
+    hub = ChannelHub()
+    g1 = SpCommGroup(1, 2, hub)
+    tg = SpTaskGraph().compute_on(engine)
+    r, out = SpData(None, "r"), SpData("untouched", "out")
+    view = mpi_recv(tg, g1, r, src=0, tag=99, timeout=0.1)  # peer never posts
+    # a dependent of data that never arrives must be cancelled, not run
+    # with garbage input
+    dep = tg.task(SpRead(r), SpWrite(out),
+                  lambda v, ref: setattr(ref, "value", v))
+    exc = view.exception(timeout=10.0)
+    assert isinstance(exc, SpCommTimeoutError)
+    assert "tag=99" in str(exc)
+    # the error was observed through the future API — the graph must not
+    # re-raise it at wait time
+    tg.wait_all_tasks(timeout=10.0)
+    assert dep.state == "cancelled"
+    assert out.value == "untouched"
+
+
+def test_group_default_timeout(engine):
+    hub = ChannelHub()
+    g1 = SpCommGroup(1, 2, hub, default_timeout=0.1)
+    tg = SpTaskGraph().compute_on(engine)
+    r = SpData(None, "r")
+    mpi_recv(tg, g1, r, src=0, tag=5)
+    with pytest.raises(SpCommTimeoutError):
+        tg.wait_all_tasks()
+
+
+def test_broadcast_recv_timeout(engine):
+    hub = ChannelHub()
+    g1 = SpCommGroup(1, 2, hub)  # root never broadcasts
+    tg = SpTaskGraph().compute_on(engine)
+    c = SpData(None, "c")
+    mpi_broadcast(tg, g1, c, root=0, timeout=0.1)
+    with pytest.raises(SpCommTimeoutError):
+        tg.wait_all_tasks()
+
+
+def test_timely_recv_does_not_time_out(engine):
+    hub = ChannelHub()
+    g0, g1 = SpCommGroup(0, 2, hub), SpCommGroup(1, 2, hub)
+    tg0 = SpTaskGraph().compute_on(engine)
+    tg1 = SpTaskGraph().compute_on(engine)
+    m, r = SpData(41, "m"), SpData(None, "r")
+    mpi_recv(tg1, g1, r, src=0, tag=1, timeout=30.0)
+    mpi_send(tg0, g0, m, dest=1, tag=1)
+    tg1.wait_all_tasks()
+    assert r.value == 41
+
+
+def test_comm_stop_reports_in_flight_requests():
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(1))
+    try:
+        hub = ChannelHub()
+        g1 = SpCommGroup(1, 2, hub)
+        tg = SpTaskGraph().compute_on(eng)
+        r = SpData(None, "r")
+        view = mpi_recv(tg, g1, r, src=0, tag=7)  # no timeout, never satisfied
+        deadline = time.monotonic() + 5.0
+        while eng._comm is None and time.monotonic() < deadline:
+            time.sleep(0.005)  # wait for the task to reach the comm thread
+        assert eng._comm is not None
+        with pytest.warns(RuntimeWarning, match="in-flight"):
+            aborted = eng._comm.stop(grace=0.2)
+        assert aborted == ["recv(from=0,tag=7)"]
+        assert isinstance(view.exception(timeout=5.0), SpCommAbortedError)
+        tg.wait_all_tasks()  # observed error is not re-raised
+    finally:
+        eng.stop()  # second stop: clean no-op, no duplicate warning
+
+
+def test_comm_abort_cancels_dependent_chain():
+    """An aborted recv must not strand its dependents in a stopped engine:
+    successors are transitively cancelled, so wait_all_tasks returns
+    instead of hanging on a chain that will never run."""
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(1))
+    try:
+        hub = ChannelHub()
+        g1 = SpCommGroup(1, 2, hub)
+        tg = SpTaskGraph().compute_on(eng)
+        r, out = SpData(None, "r"), SpData(None, "out")
+        view = mpi_recv(tg, g1, r, src=0, tag=11)  # never satisfied
+        dep = tg.task(SpRead(r), SpWrite(out),
+                      lambda v, ref: setattr(ref, "value", v))
+        deadline = time.monotonic() + 5.0
+        while eng._comm is None and time.monotonic() < deadline:
+            time.sleep(0.005)
+        with pytest.warns(RuntimeWarning, match="in-flight"):
+            eng.stop()  # workers die first, then the comm thread aborts
+        assert isinstance(view.exception(timeout=5.0), SpCommAbortedError)
+        assert dep.state == "cancelled"
+        tg.wait_all_tasks(timeout=5.0)  # must not hang (or re-raise)
+        assert out.value is None  # the dependent never ran
+    finally:
+        eng.stop()
+
+
+def test_clean_comm_shutdown_reports_nothing(engine):
+    hub = ChannelHub()
+    g0, g1 = SpCommGroup(0, 2, hub), SpCommGroup(1, 2, hub)
+    tg0 = SpTaskGraph().compute_on(engine)
+    tg1 = SpTaskGraph().compute_on(engine)
+    m, r = SpData(1, "m"), SpData(None, "r")
+    mpi_recv(tg1, g1, r, src=0, tag=2)
+    mpi_send(tg0, g0, m, dest=1, tag=2)
+    tg1.wait_all_tasks()
+    assert engine._comm.stop() == []

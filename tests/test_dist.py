@@ -95,6 +95,28 @@ def test_ring_all_gather_orders_by_rank(engine):
             np.testing.assert_array_equal(got[src], np.arange(3) + 10 * src)
 
 
+def test_hub_stays_bounded_over_100_step_ring_loop(engine):
+    """Regression: per-step tags used to leak one deque per (src, dst, tag)
+    key forever; 100 reduce steps must leave the hub's mailbox dict empty."""
+    size, steps = 2, 100
+    hub = ChannelHub()
+    groups, graphs = _ranks(engine, size, hub)
+    base = [np.full(6, float(r + 1), np.float32) for r in range(size)]
+    cells = [SpData(base[r].copy(), f"h{r}") for r in range(size)]
+    for step in range(steps):
+        for r in range(size):
+            cells[r].value = base[r].copy()
+            ring_all_reduce(graphs[r], groups[r], cells[r], tag=step)
+        for g in graphs:
+            g.wait_all_tasks()
+        for r in range(size):
+            np.testing.assert_array_equal(cells[r].value, np.full(6, 3.0, np.float32))
+    st = hub.stats()
+    assert st["boxes"] == 0 and st["queued"] == 0
+    assert len(hub._boxes) == 0  # the dict itself is pruned, not just empty
+    assert st["posted"] == st["delivered"] > 0
+
+
 def test_ring_single_rank_identity(engine):
     hub = ChannelHub()
     g = SpTaskGraph().compute_on(engine)
