@@ -1,0 +1,105 @@
+"""Failure detection + recovery benchmark → ``BENCH_recovery.json``.
+
+Two measurements (ISSUE 6 acceptance):
+
+* **detection** — :func:`repro.launch.rendezvous.run_elastic_ring` spawns
+  real OS rank processes, SIGKILLs one mid-``ring_all_reduce``, and each
+  survivor reports ``transport.death_detected_at(victim)``; detection
+  latency is that stamp minus the parent's kill time (CLOCK_MONOTONIC is
+  machine-wide on Linux).  The re-roll wall time (dead-set agreement +
+  group shrink) rides along as ``reroll_s``.
+
+* **recovery** — ``launch/train.py --fail-at`` run twice in a subprocess
+  with 8 virtual host devices (``--xla_force_host_platform_device_count``),
+  once per ``--recovery`` mode: ``live`` (``jax.device_put`` the surviving
+  in-memory state onto the shrunken mesh — no replay, no disk) vs
+  ``restore`` (full checkpoint restore + replay).  The per-recovery wall
+  times come from the launcher's own ``--bench-out`` JSON.
+
+Numbers land in ROADMAP.md's "Live elasticity" item.  Run:
+
+    PYTHONPATH=src python benchmarks/recovery_bench.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_recovery.json")
+
+TRAIN_SCRIPT = textwrap.dedent(
+    """
+    import os, sys, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.launch.train import main
+    out = main([
+        "--arch", "deepseek-7b", "--reduced", "--steps", "6",
+        "--batch", "4", "--seq", "32", "--microbatches", "2",
+        "--fail-at", "3:4", "--ckpt-dir", sys.argv[1], "--ckpt-every", "1",
+        "--recovery", sys.argv[2], "--bench-out", sys.argv[3],
+        "--log-every", "0",
+    ])
+    assert out["final_step"] == 6, out
+    assert out["recoveries"], "no recovery happened"
+    """
+)
+
+
+def measure_detection(reps: int = 3) -> dict:
+    from repro.launch.rendezvous import run_elastic_ring
+
+    detect, reroll = [], []
+    for _ in range(reps):
+        results, info = run_elastic_ring(size=3, n=257, steps=4, fail_at=2)
+        for rank, rep in results.items():
+            detect.append(rep["detect_at"] - info["t_kill"])
+            reroll.append(rep["reroll_s"])
+    return {
+        "ranks": 3,
+        "reps": reps,
+        "detect_latency_s": {"min": min(detect), "max": max(detect)},
+        "reroll_s": {"min": min(reroll), "max": max(reroll)},
+    }
+
+
+def measure_recovery() -> dict:
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out: dict = {}
+    for mode in ("live", "restore"):
+        with tempfile.TemporaryDirectory() as ckdir:
+            bench = os.path.join(ckdir, "bench.json")
+            r = subprocess.run(
+                [sys.executable, "-c", TRAIN_SCRIPT, ckdir, mode, bench],
+                env=env, capture_output=True, text=True, timeout=900, cwd=root,
+            )
+            if r.returncode != 0:
+                raise RuntimeError(
+                    f"{mode} run failed:\n{r.stdout[-2000:]}\n{r.stderr[-2000:]}"
+                )
+            with open(bench) as f:
+                rec = json.load(f)["recoveries"]
+            out[mode] = rec[0]
+    return out
+
+
+def main() -> None:
+    report = {
+        "detection": measure_detection(),
+        "recovery": measure_recovery(),
+    }
+    with open(OUT, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(json.dumps(report, indent=2))
+    print(f"wrote {os.path.abspath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -70,6 +70,8 @@ from .comm import (
     SpCommError,
     SpCommGroup,
     SpCommTimeoutError,
+    SpCommTransientError,
+    SpRankDeadError,
     SpDeserializer,
     SpSerializer,
     SpTransport,
@@ -106,6 +108,7 @@ __all__ = [
     "SpPriority", "SpRead", "SpReadArray", "SpRef", "SpWrite", "SpWriteArray",
     "SpWriteRef", "ChannelHub", "SocketTransport", "SpTransport", "SpCommGroup",
     "SpCommError", "SpCommTimeoutError", "SpCommAbortedError",
+    "SpCommTransientError", "SpRankDeadError",
     "SpDeserializer", "SpSerializer", "decode_message", "default_hub",
     "encode_message", "register_wire_type", "reset_default_hub",
     "mpi_broadcast", "mpi_recv", "mpi_send", "SpComputeEngine", "SpWorker",

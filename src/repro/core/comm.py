@@ -46,6 +46,32 @@ exception* — observable via ``TaskView.exception()`` and re-raised by
 a grace period it aborts them with :class:`SpCommAbortedError` and reports
 the affected task names.
 
+Failure detection (ISSUE 6): a *dead rank* — a killed OS process — must
+surface in O(heartbeat), not after the full ``default_timeout``.  Two
+signals feed the detector on the :class:`SocketTransport` star:
+
+* **EOF / broken pipe** — the kernel closes a SIGKILLed process's sockets,
+  so the router's per-rank forward thread sees EOF almost immediately.  A
+  rank that hangs up *without* first sending the graceful ``bye`` control
+  frame (``close()`` sends one) is declared dead on the spot.
+* **Heartbeats** — every transport runs a small sender thread posting
+  ``hb`` control frames to the router; the router's monitor declares a rank
+  dead when its last heartbeat is older than ``heartbeat_timeout``.  This
+  catches ranks that are alive-but-wedged (SIGSTOP, GIL-hung) whose
+  sockets never close.
+
+Either way the router broadcasts a ``dead`` control frame to every
+survivor; each transport records the rank in its dead set
+(:meth:`SpTransport.mark_dead`).  From then on, ``post`` to the dead rank
+and ``poll`` of an empty mailbox whose source is dead raise
+:class:`SpRankDeadError` — so every *pending* receive fails on its next
+comm-thread tick and every *future* request fails immediately, and
+dependent tasks cancel transitively exactly as timeouts do today.
+:class:`SpCommTransientError` marks retryable link faults (used by the
+fault-injection harness in ``repro.dist.fault``; retry/backoff lives
+there in ``RetryingTransport``).  All communication failures derive from
+:class:`SpCommError`, so callers can catch one type.
+
 Note on access modes: the paper's prose says a send "does a write access"
 and a receive "performs a read access"; that is logically inverted (a recv
 must order subsequent readers after it).  We implement send=READ,
@@ -64,7 +90,7 @@ import struct
 import threading
 import time
 import warnings
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
 
@@ -83,6 +109,16 @@ class SpCommTimeoutError(SpCommError):
 
 class SpCommAbortedError(SpCommError):
     """The comm thread was stopped while this request was still in flight."""
+
+
+class SpRankDeadError(SpCommError):
+    """A peer rank died (EOF without goodbye, missed heartbeats, or a retry
+    budget exhausted) — requests addressed to it will never complete."""
+
+
+class SpCommTransientError(SpCommError):
+    """A retryable link fault: a send that failed in a way a bounded
+    retry-with-backoff may recover from (injected drops, flaky links)."""
 
 
 # ---------------------------------------------------------------------------
@@ -353,8 +389,28 @@ class SpTransport:
 
     def poll(self, key: tuple) -> tuple[bool, Any]:
         """Return ``(True, msg)`` if a message is queued for ``key``, else
-        ``(False, None)`` — immediately, never waiting on a peer."""
+        ``(False, None)`` — immediately, never waiting on a peer.  May
+        raise :class:`SpRankDeadError` when the key's source rank is known
+        dead and nothing is queued."""
         raise NotImplementedError
+
+    # -- failure detection (no-ops on transports without a notion of ranks)
+
+    @property
+    def dead_ranks(self) -> frozenset:
+        """Ranks this transport knows to be dead."""
+        return frozenset()
+
+    def mark_dead(self, rank: int) -> None:
+        """Record ``rank`` as dead (idempotent)."""
+
+    def is_dead(self, rank: int) -> bool:
+        return rank in self.dead_ranks
+
+    def death_detected_at(self, rank: int) -> Optional[float]:
+        """``time.monotonic()`` of the moment ``rank`` was marked dead
+        here, or None — the detection-latency probe for benchmarks."""
+        return None
 
     def stats(self) -> dict:
         return {}
@@ -377,9 +433,27 @@ class _LockedMailboxes(SpTransport):
         self._lock = threading.Lock()
         self._posted = 0
         self._delivered = 0
+        self._dead: set[int] = set()
+        self._dead_at: dict[int, float] = {}
 
     def _box_key(self, key: tuple) -> tuple:
         return key
+
+    @property
+    def dead_ranks(self) -> frozenset:
+        with self._lock:
+            return frozenset(self._dead)
+
+    def mark_dead(self, rank: int) -> None:
+        with self._lock:
+            if rank in self._dead:
+                return
+            self._dead.add(rank)
+            self._dead_at[rank] = time.monotonic()
+
+    def death_detected_at(self, rank: int) -> Optional[float]:
+        with self._lock:
+            return self._dead_at.get(rank)
 
     def _deposit(self, boxkey: tuple, msg: Any, counter: str | None = None) -> None:
         with self._lock:
@@ -397,6 +471,14 @@ class _LockedMailboxes(SpTransport):
                     del self._boxes[boxkey]
                 self._delivered += 1
                 return True, msg
+            # already-queued messages from a now-dead rank stay deliverable;
+            # an *empty* mailbox whose source is dead will never fill — fail
+            # the poller fast instead of letting it wait out its timeout
+            src = key[0]
+            if src in self._dead:
+                raise SpRankDeadError(
+                    f"rank {src} is dead; nothing further will arrive"
+                )
         return False, None
 
     def stats(self) -> dict:
@@ -409,12 +491,14 @@ class _LockedMailboxes(SpTransport):
             }
 
     def reset(self) -> None:
-        """Drop all queued messages and counters (fresh-run hygiene for
-        shared hubs, notably the module default)."""
+        """Drop all queued messages, counters, and dead-rank state
+        (fresh-run hygiene for shared hubs, notably the module default)."""
         with self._lock:
             self._boxes.clear()
             self._posted = 0
             self._delivered = 0
+            self._dead.clear()
+            self._dead_at.clear()
 
 
 class ChannelHub(_LockedMailboxes):
@@ -422,6 +506,11 @@ class ChannelHub(_LockedMailboxes):
     copy inside one process) dropped straight into the local mailboxes."""
 
     def post(self, key: tuple, msg: Any) -> None:
+        dst = key[1]
+        with self._lock:
+            dead = dst in self._dead
+        if dead:
+            raise SpRankDeadError(f"cannot send to rank {dst}: rank is dead")
         self._deposit(key, msg, "_posted")
 
 
@@ -442,6 +531,11 @@ def reset_default_hub() -> None:
 # --------------------------------------------------------------- TCP star
 
 _FRAME_HDR = struct.Struct("<III")  # src, dst, len(tag_bytes)
+
+# control-plane pseudo-rank: frames to/from the router itself.  Transports
+# send ("__spctrl__", "hb") / ("__spctrl__", "bye") frames *to* it; the
+# router sends ("__spctrl__", "dead", rank) frames *from* it.
+_CTRL_RANK = 0xFFFFFFFF
 
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
@@ -465,82 +559,202 @@ def _tag_bytes(tag: Any) -> bytes:
 
 
 class _Router(threading.Thread):
-    """Rank 0's frame switch: accepts one connection per rank (hello = the
-    4-byte rank), then forwards every ``[len][src][dst][taglen][tag][payload]``
-    frame to ``dst``'s connection verbatim.  Forwarding starts only once all
-    ``size`` ranks have dialed in; frames written earlier sit in kernel
-    socket buffers until then."""
+    """Rank 0's frame switch *and* failure detector.
 
-    def __init__(self, host: str, port: int, size: int):
+    Accepts one connection per rank (hello = the 4-byte rank), then forwards
+    every ``[len][src][dst][taglen][tag][payload]`` frame to ``dst``'s
+    connection verbatim.  Forwarding starts only once all ``size`` ranks
+    have dialed in; frames written earlier sit in kernel socket buffers
+    until then.
+
+    Failure detection: frames addressed to :data:`_CTRL_RANK` are consumed
+    here — ``hb`` refreshes the sender's last-seen stamp, ``bye`` marks a
+    graceful leave.  A rank whose connection EOFs *without* a bye, or whose
+    last heartbeat is older than ``heartbeat_timeout``, is declared dead:
+    its connection is reaped and a ``dead`` control frame is broadcast to
+    every survivor (including rank 0's own transport, which is just another
+    connection)."""
+
+    def __init__(self, host: str, port: int, size: int, *, heartbeat_timeout: float = 10.0):
         super().__init__(name="sprouter", daemon=True)
         self._size = size
+        self._hb_timeout = heartbeat_timeout
         self._listener = socket.create_server((host, port), backlog=size)
         self.port = self._listener.getsockname()[1]
         self._conns: dict[int, socket.socket] = {}
         self._send_locks: dict[int, threading.Lock] = {}
+        self._lock = threading.Lock()  # conns / last_seen / dead / graceful
         self._fwd_lock = threading.Lock()
         self.forwarded = 0
+        self._all_in = threading.Event()
+        self._closing = False
+        self._last_seen: dict[int, float] = {}
+        self._graceful: set[int] = set()
+        self.dead: set[int] = set()
+        self._readers: list[threading.Thread] = []
 
     def run(self) -> None:
         try:
-            while len(self._conns) < self._size:
+            while not self._closing:
                 conn, _addr = self._listener.accept()
                 conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
                 (rank,) = _U32.unpack(_recv_exact(conn, 4))
-                if rank in self._conns:  # protocol breach: duplicate hello
+                with self._lock:
+                    refuse = rank in self.dead or rank in self._conns
+                    if not refuse:
+                        self._conns[rank] = conn
+                        self._send_locks[rank] = threading.Lock()
+                        self._last_seen[rank] = time.monotonic()
+                        n_in = len(self._conns)
+                if refuse:  # protocol breach: duplicate hello / dead rank
                     warnings.warn(
-                        f"router: duplicate hello for rank {rank}; "
-                        "dropping the new connection",
+                        f"router: refusing hello for rank {rank} "
+                        "(duplicate or already declared dead)",
                         RuntimeWarning,
                     )
                     conn.close()
                     continue
-                self._conns[rank] = conn
-                self._send_locks[rank] = threading.Lock()
+                if self._all_in.is_set():
+                    self._start_reader(rank, conn)  # late joiner post-barrier
+                elif n_in == self._size:
+                    self._all_in.set()
+                    with self._lock:
+                        ready = list(self._conns.items())
+                    for r, c in ready:
+                        self._start_reader(r, c)
+                    threading.Thread(
+                        target=self._monitor, name="sprouter-hb", daemon=True
+                    ).start()
         except (ConnectionError, OSError) as e:
-            # a rank died mid-rendezvous: the job cannot form — fail loudly
-            # instead of leaving a half-dead router thread behind
-            warnings.warn(
-                f"router: rendezvous failed ({e!r}); closing all connections",
-                RuntimeWarning,
-            )
-            for c in self._conns.values():
-                c.close()
-            self._listener.close()
-            return
-        self._listener.close()
-        readers = [
-            threading.Thread(
-                target=self._forward_from, args=(r,), name=f"sproute-{r}", daemon=True
-            )
-            for r in self._conns
-        ]
-        for t in readers:
-            t.start()
-        for t in readers:
+            if not self._closing and not self._all_in.is_set():
+                # a rank died mid-rendezvous: the job cannot form — fail
+                # loudly instead of leaving a half-dead router thread behind
+                warnings.warn(
+                    f"router: rendezvous failed ({e!r}); closing all connections",
+                    RuntimeWarning,
+                )
+                with self._lock:
+                    conns = list(self._conns.values())
+                for c in conns:
+                    c.close()
+        finally:
+            try:
+                self._listener.close()
+            except OSError:  # pragma: no cover - already closed
+                pass
+        for t in list(self._readers):
             t.join()
 
-    def _forward_from(self, rank: int) -> None:
-        conn = self._conns[rank]
+    def _start_reader(self, rank: int, conn: socket.socket) -> None:
+        t = threading.Thread(
+            target=self._forward_from, args=(rank, conn),
+            name=f"sproute-{rank}", daemon=True,
+        )
+        self._readers.append(t)
+        t.start()
+
+    def soft_close(self) -> None:
+        """Stop accepting and monitoring; live peer↔peer forwarding keeps
+        running until each peer hangs up (rank 0 may finish first)."""
+        self._closing = True
+        try:
+            self._listener.close()
+        except OSError:  # pragma: no cover - already closed
+            pass
+
+    # -- data plane ----------------------------------------------------------
+
+    def _forward_from(self, rank: int, conn: socket.socket) -> None:
         try:
             while True:
                 head = _recv_exact(conn, 4)
                 (n,) = _U32.unpack(head)
                 body = _recv_exact(conn, n)
-                dst = _FRAME_HDR.unpack_from(body, 0)[1]
-                out = self._conns.get(dst)
-                if out is None:
+                _src, dst, taglen = _FRAME_HDR.unpack_from(body, 0)
+                if dst == _CTRL_RANK:
+                    off = _FRAME_HDR.size
+                    ctrl = decode_message(body[off : off + taglen])
+                    with self._lock:
+                        if ctrl[1] == "hb":
+                            self._last_seen[rank] = time.monotonic()
+                        elif ctrl[1] == "bye":
+                            self._graceful.add(rank)
                     continue
-                with self._send_locks[dst]:
-                    out.sendall(head + body)
+                with self._lock:
+                    out = self._conns.get(dst)
+                    lock = self._send_locks.get(dst)
+                if out is None:
+                    continue  # dst gone (dead or departed): drop the frame
+                try:
+                    with lock:
+                        out.sendall(head + body)
+                except OSError:
+                    continue  # dst hung up mid-forward; its own EOF handles it
                 with self._fwd_lock:
                     self.forwarded += 1
         except (ConnectionError, OSError):
             pass  # rank hung up; in-flight traffic for it is already queued
         finally:
+            with self._lock:
+                graceful = rank in self._graceful
+                current = self._conns.get(rank) is conn
+                if current:
+                    del self._conns[rank]
+                    self._send_locks.pop(rank, None)
             try:
                 conn.close()
             except OSError:  # pragma: no cover - already closed
+                pass
+            if current and not graceful and not self._closing:
+                # EOF without a goodbye: the process died under us
+                self._declare_dead(rank, "connection lost without goodbye")
+
+    # -- failure detector ----------------------------------------------------
+
+    def _monitor(self) -> None:
+        interval = max(self._hb_timeout / 4.0, 0.02)
+        while not self._closing:
+            time.sleep(interval)
+            now = time.monotonic()
+            with self._lock:
+                stale = [
+                    r
+                    for r, seen in self._last_seen.items()
+                    if r in self._conns
+                    and r not in self._graceful
+                    and r not in self.dead
+                    and now - seen > self._hb_timeout
+                ]
+            for r in stale:
+                self._declare_dead(
+                    r, f"no heartbeat for more than {self._hb_timeout}s"
+                )
+
+    def _declare_dead(self, rank: int, why: str) -> None:
+        with self._lock:
+            if rank in self.dead:
+                return
+            self.dead.add(rank)
+            conn = self._conns.pop(rank, None)
+            self._send_locks.pop(rank, None)
+            targets = [
+                (r, self._conns[r], self._send_locks[r]) for r in self._conns
+            ]
+        if conn is not None:
+            try:
+                conn.close()
+            except OSError:  # pragma: no cover - already closed
+                pass
+        warnings.warn(
+            f"router: declaring rank {rank} dead ({why})", RuntimeWarning
+        )
+        tag_b = encode_message(("__spctrl__", "dead", rank))
+        for r, c, lk in targets:
+            body = _FRAME_HDR.pack(_CTRL_RANK, r, len(tag_b)) + tag_b
+            try:
+                with lk:
+                    c.sendall(_U32.pack(len(body)) + body)
+            except OSError:  # pragma: no cover - survivor also going away
                 pass
 
 
@@ -562,6 +776,9 @@ class SocketTransport(_LockedMailboxes):
         host: str = "127.0.0.1",
         port: int = 0,
         connect_timeout: float = 10.0,
+        max_dial_retries: int = 100,
+        heartbeat_interval: float = 0.5,
+        heartbeat_timeout: float = 10.0,
     ):
         super().__init__()
         self.rank, self.size, self.host = rank, size, host
@@ -569,22 +786,31 @@ class SocketTransport(_LockedMailboxes):
         self._closed = False
         self._router: Optional[_Router] = None
         if rank == 0:
-            self._router = _Router(host, port, size)
+            self._router = _Router(host, port, size, heartbeat_timeout=heartbeat_timeout)
             self._router.start()
             port = self._router.port
         elif port == 0:
             raise ValueError("non-root ranks must be told the rendezvous port")
         self.port = port
 
+        # rank 0 may not be listening yet — dial with a bounded retry count
+        # and exponential backoff instead of hammering until connect_timeout
         deadline = time.monotonic() + connect_timeout
-        while True:  # rank 0 may not be listening yet — dial until it is
+        delay, attempts = 0.01, 0
+        while True:
             try:
                 self._sock = socket.create_connection((host, port), timeout=connect_timeout)
                 break
-            except OSError:
-                if time.monotonic() > deadline:
-                    raise
-                time.sleep(0.02)
+            except OSError as e:
+                attempts += 1
+                if attempts >= max_dial_retries or time.monotonic() + delay > deadline:
+                    raise SpCommError(
+                        f"rank {rank}: rendezvous at {host}:{port} unreachable "
+                        f"after {attempts} dial attempts over "
+                        f"{connect_timeout}s ({e})"
+                    ) from e
+                time.sleep(delay)
+                delay = min(delay * 2.0, 0.5)
         # create_connection leaves connect_timeout armed on the socket;
         # clear it or an idle gap longer than that kills the receiver
         # thread with a swallowed socket.timeout (an OSError subclass)
@@ -596,6 +822,12 @@ class SocketTransport(_LockedMailboxes):
             target=self._recv_loop, name=f"sprecv-{rank}", daemon=True
         )
         self._reader.start()
+        self._hb_interval = heartbeat_interval
+        self._hb_stop = threading.Event()
+        self._hb = threading.Thread(
+            target=self._hb_loop, name=f"sphb-{rank}", daemon=True
+        )
+        self._hb.start()
 
     # -- wire side (receiver thread only) ------------------------------------
 
@@ -607,10 +839,36 @@ class SocketTransport(_LockedMailboxes):
                 src, _dst, taglen = _FRAME_HDR.unpack_from(body, 0)
                 off = _FRAME_HDR.size
                 tag_b = body[off : off + taglen]
+                if src == _CTRL_RANK:  # router control plane
+                    ctrl = decode_message(tag_b)
+                    if ctrl[1] == "dead":
+                        self.mark_dead(ctrl[2])
+                    continue
                 msg = decode_message(body[off + taglen :])
                 self._deposit((src, self.rank, tag_b), msg, "_received")
         except (ConnectionError, OSError):
-            pass  # transport closed (ours or the router's)
+            # transport closed.  If *we* did not close it, the router (and
+            # with it rank 0) is gone: the star cannot route anything any
+            # more, so every peer is effectively dead from here
+            if not self._closed:
+                for r in range(self.size):
+                    if r != self.rank:
+                        self.mark_dead(r)
+
+    # -- control plane -------------------------------------------------------
+
+    def _send_ctrl(self, kind: str) -> None:
+        tag_b = encode_message(("__spctrl__", kind))
+        body = _FRAME_HDR.pack(self.rank, _CTRL_RANK, len(tag_b)) + tag_b
+        with self._wlock:
+            self._sock.sendall(_U32.pack(len(body)) + body)
+
+    def _hb_loop(self) -> None:
+        while not self._hb_stop.wait(self._hb_interval):
+            try:
+                self._send_ctrl("hb")
+            except OSError:
+                return  # wire gone; the receiver thread handles the fallout
 
     # -- mailbox side ---------------------------------------------------------
 
@@ -620,11 +878,21 @@ class SocketTransport(_LockedMailboxes):
 
     def _send_frame(self, key: tuple, payload: bytes) -> None:
         src, dst, tag = key
+        with self._lock:
+            dead = dst in self._dead
+        if dead:
+            raise SpRankDeadError(f"cannot send to rank {dst}: rank is dead")
         tag_b = _tag_bytes(tag)
         body = _FRAME_HDR.pack(src, dst, len(tag_b)) + tag_b + payload
-        with self._wlock:
-            self._sock.sendall(_U32.pack(len(body)) + body)
-            self._posted += 1
+        try:
+            with self._wlock:
+                self._sock.sendall(_U32.pack(len(body)) + body)
+                self._posted += 1
+        except OSError as e:
+            raise SpCommError(
+                f"socket send to rank {dst} failed: wire to the router is "
+                f"down ({e})"
+            ) from e
 
     def post(self, key: tuple, msg: Any) -> None:
         self._send_frame(key, encode_message(msg))
@@ -644,12 +912,20 @@ class SocketTransport(_LockedMailboxes):
         if self._closed:
             return
         self._closed = True
+        self._hb_stop.set()
+        try:
+            self._send_ctrl("bye")  # graceful leave: not a death
+        except OSError:
+            pass
+        if self._router is not None:
+            self._router.soft_close()
         try:
             self._sock.shutdown(socket.SHUT_RDWR)
         except OSError:
             pass
         self._sock.close()
         self._reader.join(timeout=2.0)
+        self._hb.join(timeout=2.0)
         if self._router is not None:
             self._router.join(timeout=2.0)
 
@@ -665,7 +941,15 @@ class SpCommGroup:
 
     ``hub`` may be any :class:`SpTransport`; the in-process default is the
     module-wide :func:`default_hub`.  ``default_timeout`` (seconds) applies
-    to every receive issued through this group unless the call overrides it."""
+    to every receive issued through this group unless the call overrides it.
+
+    ``members`` (default ``range(size)``) is the *logical* membership: the
+    physical ranks participating in this group's collectives, in logical
+    order.  ``rank`` / ``size`` stay physical — they are wire identity —
+    while ring neighbours etc. are computed in logical coordinates and
+    translated via :meth:`to_physical`.  After a rank death, survivors call
+    :meth:`shrunk` to get a group over the remaining members without
+    re-bootstrapping the transport (the live-reshard recovery path)."""
 
     def __init__(
         self,
@@ -674,16 +958,58 @@ class SpCommGroup:
         hub: SpTransport | None = None,
         *,
         default_timeout: float | None = None,
+        members: Sequence[int] | None = None,
     ):
         self.rank = rank
         self.size = size
         self.hub = hub if hub is not None else default_hub()
         self.default_timeout = default_timeout
+        self.members = tuple(members) if members is not None else tuple(range(size))
+        if rank not in self.members:
+            raise ValueError(
+                f"rank {rank} is not one of this group's members {self.members}"
+            )
+        self._logical_rank = self.members.index(rank)
         self._bcast_seq = 0  # paper: same broadcasts, same order on all ranks
 
     @property
     def transport(self) -> SpTransport:
         return self.hub
+
+    # -- logical coordinates (shrink-aware collectives) -----------------------
+
+    @property
+    def logical_size(self) -> int:
+        return len(self.members)
+
+    @property
+    def logical_rank(self) -> int:
+        return self._logical_rank
+
+    def to_physical(self, logical_rank: int) -> int:
+        return self.members[logical_rank % len(self.members)]
+
+    def shrunk(self, dead: Sequence[int]) -> "SpCommGroup":
+        """A new group over the surviving members (same transport, same
+        physical identity); broadcast sequencing carries over so survivors
+        stay aligned."""
+        gone = set(dead)
+        members = tuple(r for r in self.members if r not in gone)
+        if self.rank in gone or self.rank not in members:
+            raise SpCommError(
+                f"rank {self.rank} is itself in the dead set {sorted(gone)}"
+            )
+        if not members:
+            raise SpCommError("no members survive")
+        g = SpCommGroup(
+            self.rank,
+            self.size,
+            self.hub,
+            default_timeout=self.default_timeout,
+            members=members,
+        )
+        g._bcast_seq = self._bcast_seq
+        return g
 
 
 # ---------------------------------------------------------------------------
@@ -721,7 +1047,14 @@ class _RecvRequest(CommRequest):
 
     def test(self) -> bool:
         if not self._have:
-            ok, msg = self.transport.poll(self.key)
+            try:
+                ok, msg = self.transport.poll(self.key)
+            except SpRankDeadError as e:
+                src, dst, tag = self.key
+                raise SpRankDeadError(
+                    f"recv(src={src}, dst={dst}, tag={tag!r}) can never "
+                    f"complete: {e}"
+                ) from e
             if ok:
                 self._msg = msg
                 self._have = True
@@ -816,7 +1149,7 @@ def mpi_broadcast(
         def start(args):
             msg = pack(args[0])
             group.hub.post_all(
-                [(root, r, tag) for r in range(group.size) if r != root], msg
+                [(root, r, tag) for r in group.members if r != root], msg
             )
             return _DoneRequest()
 

@@ -120,6 +120,7 @@ class SpComputeEngine:
         self._workers: list[SpWorker] = []
         self._graphs: list = []
         self._comm = None  # lazily created CommThread (comm.py)
+        self._stop_report: list[str] | None = None  # set by the first stop()
         if team is None:  # (SpWorkerTeam also defines __len__ — same trap)
             team = SpWorkerTeamBuilder.team_of_cpu_workers()
         for kind in team.kinds:
@@ -386,8 +387,14 @@ class SpComputeEngine:
         queued tasks.  Returns the names of comm tasks whose requests had
         to be aborted (empty in a clean shutdown); those tasks carry an
         ``SpCommAbortedError`` so their waiters see a real error instead of
-        hanging on a leaked daemon thread."""
+        hanging on a leaked daemon thread.
+
+        Idempotent: a second call (recovery path + ``atexit``, or an
+        explicit ``stop()`` followed by ``__exit__``) returns the first
+        call's report without re-joining threads or re-cancelling tasks."""
         with self._lock:
+            if self._stop_report is not None:
+                return list(self._stop_report)
             self._running = False
             workers = list(self._workers)
             for w in workers:
@@ -402,6 +409,8 @@ class SpComputeEngine:
         if self._comm is not None:
             aborted = self._comm.stop()
         self._drain_cancel_leftovers()
+        with self._lock:
+            self._stop_report = list(aborted)
         return aborted
 
     stopIfNotAlreadyStopped = stop

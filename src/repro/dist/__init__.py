@@ -39,8 +39,13 @@ that story adapted to the JAX substrate (DESIGN.md §2/§5), split in three:
   cancellation hooks (paper §4.2 dynamic worker teams are the recovery
   lever): :class:`CancelToken` + :func:`run_duplicated` replicated tasks
   with first-result-wins, :class:`FailureSimulator` for injecting rank
-  loss, and :func:`remesh_plan` for shrinking the mesh while preserving
-  model parallelism (the elastic re-mesh driven by ``launch/train.py``).
+  loss, :class:`FaultyTransport` (deterministic seeded drop / delay /
+  duplicate / truncate injection) + :class:`RetryingTransport` (bounded
+  exponential-backoff retry that escalates to
+  :class:`~repro.core.SpRankDeadError`), and :func:`remesh_plan` for
+  shrinking the mesh while preserving model parallelism (the elastic
+  re-mesh driven by ``launch/train.py``; live reshard recovery is the
+  ``--recovery live`` path there).
 """
 from .sharding import (
     current_mesh,
@@ -64,7 +69,9 @@ from .collectives import (
 from .fault import (
     CancelToken,
     FailureSimulator,
+    FaultyTransport,
     RemeshPlan,
+    RetryingTransport,
     remesh_plan,
     run_duplicated,
 )
@@ -74,5 +81,6 @@ __all__ = [
     "use_mesh", "all_gather", "all_reduce", "compress_int8", "compress_tree",
     "decompress_int8", "hierarchical_psum", "init_residuals",
     "ring_all_gather", "ring_all_reduce", "CancelToken", "FailureSimulator",
+    "FaultyTransport", "RetryingTransport",
     "RemeshPlan", "remesh_plan", "run_duplicated",
 ]

@@ -107,10 +107,13 @@ def ring_all_reduce(
     """
     if op not in ("sum", "mean"):
         raise ValueError(f"unsupported op {op!r}; use 'sum' or 'mean'")
-    S, r = group.size, group.rank
+    # Logical coordinates: the ring is laid out over group.members, so a
+    # group shrunk after a rank death still forms a closed ring; neighbours
+    # are translated back to physical ranks for the wire.
+    S, r = group.logical_size, group.logical_rank
     if S == 1:
         return _ring_identity(x, graph=graph, name=f"allreduce{tag}.id")
-    right, left = (r + 1) % S, (r - 1) % S
+    right, left = group.to_physical(r + 1), group.to_physical(r - 1)
     chunks = [SpData(None, f"ar{tag}.r{r}.c{i}") for i in range(S)]
     meta: dict = {}
 
@@ -149,11 +152,12 @@ def ring_all_gather(
     tag: int = 0,
 ) -> TaskView:
     """Ring all-gather: the returned view's value is the list of every
-    rank's ``x.value``, ordered by rank (same list on all ranks)."""
-    S, r = group.size, group.rank
+    rank's ``x.value``, ordered by logical rank — i.e. by position in
+    ``group.members`` (same list on all ranks)."""
+    S, r = group.logical_size, group.logical_rank
     if S == 1:
         return _ring_identity(x, wrap=True, graph=graph, name=f"allgather{tag}.id")
-    right, left = (r + 1) % S, (r - 1) % S
+    right, left = group.to_physical(r + 1), group.to_physical(r - 1)
     slots = [SpData(None, f"ag{tag}.r{r}.s{i}") for i in range(S)]
     _ring_seed(x, slots[r], graph=graph, name=f"allgather{tag}.seed")
     for step in range(S - 1):

@@ -17,15 +17,34 @@ spawns the ranks with :mod:`multiprocessing` (spawn context: no inherited
 JAX/threading state), reduces a float32 vector over TCP, checks the result
 against the NumPy reference bit-for-bit, and prints per-rank wall time —
 the measured two-process result tracked in ROADMAP.md.
+
+Elastic recovery (ISSUE 6): when a rank dies mid-run the survivors must
+*agree* on the dead set before resharding — each may have detected the
+death at a different moment.  :func:`reroll_ranks` is that agreement: a
+fixed two-round, epoch-tagged all-to-all over the raw transport (view
+exchange → union confirmation), returning the shrunken
+:class:`~repro.core.SpCommGroup` plus every survivor's piggy-backed
+payload (the drivers exchange their next step and resume from the
+minimum, so no survivor waits on a step another already passed).
+:func:`run_elastic_ring` is the acceptance driver: it spawns real OS
+ranks, SIGKILLs one mid-``ring_all_reduce``, and returns the survivors'
+per-step results plus detection/recovery timings.
 """
 from __future__ import annotations
 
 import multiprocessing as mp
+import os
 import queue as _queue
+import signal
 import time
-from typing import Any
+from typing import Any, Optional
 
-__all__ = ["bootstrap_transport", "run_ring_reduce"]
+__all__ = [
+    "bootstrap_transport",
+    "reroll_ranks",
+    "run_elastic_ring",
+    "run_ring_reduce",
+]
 
 
 def bootstrap_transport(
@@ -35,12 +54,118 @@ def bootstrap_transport(
     port: int,
     host: str = "127.0.0.1",
     timeout: float = 30.0,
+    max_dial_retries: int = 100,
+    heartbeat_interval: float = 0.5,
+    heartbeat_timeout: float = 10.0,
 ):
     """Create this rank's :class:`SocketTransport`: rank 0 binds ``port``
-    and routes, everyone dials (retrying until rank 0 is listening)."""
+    and routes, everyone dials.  The dial loop is bounded: at most
+    ``max_dial_retries`` attempts with exponential backoff inside
+    ``timeout`` seconds, then a ``SpCommError`` naming the rendezvous
+    address."""
     from repro.core.comm import SocketTransport
 
-    return SocketTransport(rank, size, host=host, port=port, connect_timeout=timeout)
+    return SocketTransport(
+        rank,
+        size,
+        host=host,
+        port=port,
+        connect_timeout=timeout,
+        max_dial_retries=max_dial_retries,
+        heartbeat_interval=heartbeat_interval,
+        heartbeat_timeout=heartbeat_timeout,
+    )
+
+
+def reroll_ranks(
+    group,
+    *,
+    epoch: int,
+    payload: Any = None,
+    timeout: float = 30.0,
+    poll_interval: float = 0.002,
+):
+    """Epoch-tagged rendezvous re-roll: survivors agree on the dead set and
+    exchange payloads, then the group shrinks to the survivors.
+
+    Fixed two-round protocol over the raw transport (no comm tasks — the
+    task graph that just failed may still hold in-flight requests):
+
+    1. every presumed survivor broadcasts its local view
+       ``{dead, payload}`` to the others and collects theirs; a peer whose
+       poll raises ``SpRankDeadError`` mid-round joins the dead set;
+    2. every survivor broadcasts the *union* dead set it computed and
+       checks the unions agree — divergence (a death landing between the
+       rounds) raises ``SpCommError``, and the caller re-rolls with a
+       fresh ``epoch``.
+
+    Exactly two rounds on every rank, so no rank stalls waiting for a
+    round its peers never run.  Returns ``(shrunk_group, dead, payloads)``
+    with ``payloads`` keyed by surviving physical rank (self included).
+    """
+    from repro.core.comm import SpCommError, SpRankDeadError
+
+    tr = group.hub
+    me = group.rank
+
+    def _exchange(round_no: int, msg: Any, peers: list[int]) -> tuple[dict, set]:
+        """Send ``msg`` to ``peers``, collect their round-``round_no``
+        messages; returns (views, found_dead)."""
+        newly_dead: set[int] = set()
+        tag = ("__reroll__", epoch, round_no)
+        for r in peers:
+            try:
+                tr.post((me, r, tag), msg)
+            except SpRankDeadError:
+                newly_dead.add(r)
+        views: dict[int, Any] = {me: msg}
+        pending = set(peers) - newly_dead
+        deadline = time.monotonic() + timeout
+        while pending:
+            for r in list(pending):
+                try:
+                    ok, m = tr.poll((r, me, tag))
+                except SpRankDeadError:
+                    newly_dead.add(r)
+                    pending.discard(r)
+                    continue
+                if ok:
+                    views[r] = m
+                    pending.discard(r)
+            if not pending:
+                break
+            if time.monotonic() > deadline:
+                raise SpCommError(
+                    f"reroll epoch {epoch} round {round_no}: ranks "
+                    f"{sorted(pending)} never answered within {timeout}s"
+                )
+            time.sleep(poll_interval)
+        return views, newly_dead
+
+    dead = set(tr.dead_ranks)
+    alive = [r for r in group.members if r not in dead and r != me]
+
+    views, newly = _exchange(1, {"dead": sorted(dead), "payload": payload}, alive)
+    dead |= newly
+    for v in views.values():
+        dead |= set(v["dead"])
+    dead |= set(tr.dead_ranks)  # deaths detected while round 1 ran
+
+    survivors = [r for r in alive if r not in dead]
+    unions, newly2 = _exchange(2, sorted(dead), survivors)
+    dead |= newly2
+    for r, their_union in unions.items():
+        if r != me and set(their_union) != dead - newly2:
+            raise SpCommError(
+                f"reroll epoch {epoch}: dead-set divergence — rank {r} "
+                f"sees {their_union}, this rank sees {sorted(dead)}; "
+                f"re-roll with a fresh epoch"
+            )
+
+    payloads = {
+        r: v["payload"] for r, v in views.items() if r == me or r not in dead
+    }
+    return group.shrunk(sorted(dead)), frozenset(dead), payloads
 
 
 def _ring_worker(rank: int, size: int, port: int, n: int, steps: int, q, port_q=None) -> None:
@@ -145,6 +270,224 @@ def run_ring_reduce(
             f"only {len(results)}/{size} ranks reported within {timeout}s"
         )
     return results
+
+
+def _elastic_worker(
+    rank: int,
+    size: int,
+    port: int,
+    n: int,
+    steps: int,
+    q,
+    progress_q,
+    port_q=None,
+    hb_timeout: float = 3.0,
+    victim_hold: tuple[int, float] | None = None,
+) -> None:
+    """One elastic rank: all-reduce ``steps`` times, surviving rank death.
+
+    Every step gets a *fresh* task graph, so a step that fails mid-collective
+    can be abandoned wholesale (its lingering receives time out harmlessly on
+    the comm thread).  On detecting a death — its own failed task *or* the
+    transport's dead set growing while it waits — the rank abandons the
+    step, re-rolls the group with :func:`reroll_ranks` exchanging its next
+    step, and resumes from the minimum exchanged step on the shrunken ring."""
+    import numpy as np
+
+    from repro.core import (
+        SpCommError,
+        SpCommGroup,
+        SpComputeEngine,
+        SpData,
+        SpTaskGraph,
+        SpWorkerTeamBuilder,
+    )
+    from repro.dist.collectives import ring_all_reduce
+
+    transport = bootstrap_transport(
+        rank, size, port=port, heartbeat_interval=0.2, heartbeat_timeout=hb_timeout
+    )
+    if rank == 0 and port_q is not None:
+        port_q.put(transport.port)
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(2))
+    try:
+        group = SpCommGroup(rank, size, transport, default_timeout=30.0)
+        rng = np.random.default_rng(rank)
+        base = rng.standard_normal(n).astype(np.float32)
+
+        results: dict[int, Any] = {}
+        epoch = 0
+        resume_step: Optional[int] = None
+        detect_at: Optional[float] = None
+        reroll_s: Optional[float] = None
+        step = 0
+        while step < steps:
+            tg = SpTaskGraph(trace=False).compute_on(eng)
+            x = SpData(base.copy(), f"e{epoch}s{step}")
+            ring_all_reduce(tg, group, x, op="sum", tag=(epoch, step))
+            # progress is reported *after* the collective is inserted — its
+            # comm tasks are already in flight on the engine's background
+            # threads, so a parent killing on this report kills mid-collective
+            progress_q.put(("step", rank, step))
+            if victim_hold is not None and step == victim_hold[0]:
+                # the designated victim lingers inside the collective so the
+                # parent's SIGKILL reliably lands mid-flight
+                time.sleep(victim_hold[1])
+            failed = False
+            deadline = time.monotonic() + 60.0
+            while True:
+                try:
+                    tg.wait_all_tasks(timeout=0.1)
+                    break
+                except TimeoutError:
+                    if transport.dead_ranks & set(group.members):
+                        failed = True  # a member died while we waited
+                        break
+                    if time.monotonic() > deadline:
+                        raise
+                except SpCommError:
+                    failed = True
+                    break
+            if failed:
+                # the task error can beat the router's death broadcast by a
+                # tick — give the transport a moment to learn who died
+                learn_by = time.monotonic() + 10.0
+                while not (transport.dead_ranks & set(group.members)):
+                    if time.monotonic() > learn_by:
+                        raise SpCommError(
+                            f"rank {rank}: step {step} failed but no rank "
+                            f"was declared dead within 10s"
+                        )
+                    time.sleep(0.005)
+                dead_now = transport.dead_ranks & set(group.members)
+                detect_at = min(
+                    (transport.death_detected_at(r) or time.monotonic())
+                    for r in dead_now
+                ) if dead_now else time.monotonic()
+                epoch += 1
+                t0 = time.monotonic()
+                group, dead, payloads = reroll_ranks(
+                    group, epoch=epoch, payload={"next_step": step}
+                )
+                reroll_s = time.monotonic() - t0
+                resume_step = min(p["next_step"] for p in payloads.values())
+                step = resume_step
+                continue
+            results[step] = x.value
+            step += 1
+
+        q.put(
+            (
+                rank,
+                {
+                    "steps": results,
+                    "resume_step": resume_step,
+                    "detect_at": detect_at,
+                    "reroll_s": reroll_s,
+                    "members": list(group.members),
+                    "dead": sorted(transport.dead_ranks),
+                    "stats": transport.stats(),
+                },
+            )
+        )
+    finally:
+        eng.stop()
+        transport.close()
+
+
+def run_elastic_ring(
+    size: int = 3,
+    n: int = 257,
+    *,
+    steps: int = 4,
+    fail_at: int = 2,
+    timeout: float = 180.0,
+    kill_delay: float = 0.02,
+    victim_hold_s: float = 2.0,
+) -> tuple[dict, dict]:
+    """Spawn ``size`` rank processes, SIGKILL the highest rank as it enters
+    step ``fail_at``'s all-reduce, and return the survivors' reports.
+
+    Returns ``(results, info)``: ``results[rank]`` is each survivor's
+    report from :func:`_elastic_worker`; ``info`` records the victim and
+    the parent's ``time.monotonic()`` at the moment of the kill, so
+    detection latency is ``report["detect_at"] - info["t_kill"]``
+    (CLOCK_MONOTONIC is machine-wide on Linux)."""
+    if size < 3:
+        raise ValueError("need >= 3 ranks: the victim must not be the router")
+    victim = size - 1  # never rank 0 — the router dies with it
+    ctx = mp.get_context("spawn")
+    q: Any = ctx.Queue()
+    progress_q: Any = ctx.Queue()
+    port_q: Any = ctx.Queue()
+    procs = [
+        ctx.Process(
+            target=_elastic_worker,
+            args=(0, size, 0, n, steps, q, progress_q, port_q),
+            daemon=True,
+        )
+    ]
+    procs[0].start()
+    try:
+        port = port_q.get(timeout=timeout)
+    except _queue.Empty:
+        procs[0].terminate()
+        raise TimeoutError(f"rank 0 did not bind a rendezvous port within {timeout}s")
+    for r in range(1, size):
+        hold = (fail_at, victim_hold_s) if r == victim else None
+        p = ctx.Process(
+            target=_elastic_worker,
+            args=(r, size, port, n, steps, q, progress_q, None, 3.0, hold),
+            daemon=True,
+        )
+        procs.append(p)
+        p.start()
+
+    info: dict[str, Any] = {"victim": victim, "t_kill": None}
+    results: dict[int, dict] = {}
+    survivors = size - 1
+    deadline = time.monotonic() + timeout
+    try:
+        # phase 1: watch progress until the victim enters step fail_at
+        while info["t_kill"] is None and time.monotonic() < deadline:
+            try:
+                kind, rank, step = progress_q.get(timeout=1.0)
+            except _queue.Empty:
+                continue
+            if kind == "step" and rank == victim and step == fail_at:
+                time.sleep(kill_delay)  # let its sends enter the collective
+                info["t_kill"] = time.monotonic()
+                os.kill(procs[victim].pid, signal.SIGKILL)
+        if info["t_kill"] is None:
+            raise TimeoutError(
+                f"victim rank {victim} never reached step {fail_at}"
+            )
+        # phase 2: collect the survivors' reports
+        while len(results) < survivors and time.monotonic() < deadline:
+            try:
+                rank, report = q.get(timeout=1.0)
+                if rank == victim:  # pragma: no cover - the kill was too slow
+                    raise RuntimeError("the victim survived and reported")
+            except _queue.Empty:
+                bad = [
+                    (p.name, p.exitcode)
+                    for i, p in enumerate(procs)
+                    if i != victim and p.exitcode not in (None, 0)
+                ]
+                if bad:
+                    raise RuntimeError(f"a survivor rank died: {bad}")
+                continue
+            results[rank] = report
+    finally:
+        for p in procs:
+            p.join(timeout=10.0)
+            if p.is_alive():  # pragma: no cover - hung rank
+                p.terminate()
+    if len(results) < survivors:
+        raise TimeoutError(
+            f"only {len(results)}/{survivors} survivors reported within {timeout}s"
+        )
+    return results, info
 
 
 def main(argv=None) -> None:

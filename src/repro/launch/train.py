@@ -10,15 +10,25 @@ failure simulation + elastic re-mesh, resume-from-latest.
 Elastic fault tolerance (``--fail-at STEP:RANKS``): a
 :class:`~repro.dist.fault.FailureSimulator` injects a rank loss at STEP;
 the launcher computes a :func:`~repro.dist.fault.remesh_plan` over the
-survivors (preserving model parallelism), rebuilds the mesh, restores from
-the latest checkpoint (falling back to re-sharding the in-memory state) and
-resumes — the data-pipeline cursor is the step counter, so resumption is
-deterministic.
+survivors (preserving model parallelism), rebuilds the mesh, and recovers
+by one of two paths (``--recovery``):
+
+* ``live`` (default) — *live reshard*: ``jax.device_put`` the surviving
+  in-memory state onto the new mesh and continue from the failed step; no
+  replay, no disk.  Falls back to checkpoint restore only when there is no
+  in-memory state to reshard.
+* ``restore`` — full checkpoint restore (replays every step since the
+  last save); requires ``--ckpt-dir``/``--ckpt-every`` (or ``--resume``).
+
+Either way the data-pipeline cursor is the step counter, so resumption is
+deterministic.  Each recovery is timed; ``--bench-out PATH`` writes the
+timings as JSON (the ``BENCH_recovery.json`` series).
 """
 from __future__ import annotations
 
 import argparse
 import contextlib
+import json
 import time
 
 import jax
@@ -72,6 +82,15 @@ def main(argv=None) -> dict:
         "--fail-at", default=None, metavar="STEP:RANKS", type=_parse_fail_at,
         help="simulate losing RANKS chips at STEP, then elastically re-mesh",
     )
+    ap.add_argument(
+        "--recovery", choices=("live", "restore"), default="live",
+        help="after a re-mesh: live-reshard the in-memory state (default) "
+        "or restore the latest checkpoint",
+    )
+    ap.add_argument(
+        "--bench-out", default=None, metavar="PATH",
+        help="write recovery timings as JSON to PATH",
+    )
     args = ap.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -89,6 +108,7 @@ def main(argv=None) -> dict:
     losses: list[float] = []  # losses[i] is the loss of step base_step + i + 1
     base_step = None
     remeshed = False
+    recoveries: list[dict] = []  # one entry per re-mesh: mode/step/seconds
     # only checkpoints this process saved (or explicitly opted into via
     # --resume) may be restored after a failure — a stale dir from an
     # earlier run must not hijack the step counter
@@ -106,20 +126,45 @@ def main(argv=None) -> dict:
                 donate=False,
             )
             if remeshed:
-                # re-entering after a re-mesh: prefer the durable checkpoint,
-                # fall back to re-sharding the surviving in-memory state
+                # re-entering after a re-mesh: live reshard keeps the
+                # surviving in-memory state (no replay, no disk); restore
+                # replays from the latest durable checkpoint
                 remeshed = False
-                if restorable and mgr is not None and mgr.latest_step() is not None:
+                t_rec = time.perf_counter()
+                can_restore = (
+                    restorable and mgr is not None and mgr.latest_step() is not None
+                )
+                if args.recovery == "live" and state is not None:
+                    state = jax.device_put(state, train_state_shardings(cfg))
+                    jax.block_until_ready(state)
+                    mode = "live"
+                    print(f"[train] live-resharded step {start_step} onto new mesh")
+                elif can_restore:
                     start_step, state = mgr.restore(abstract_train_state(cfg))
+                    jax.block_until_ready(state)
                     # drop losses of the steps the restore will replay
                     if start_step < base_step:
                         losses.clear()
                         base_step = start_step
                     else:
                         del losses[start_step - base_step:]
+                    mode = "restore"
                     print(f"[train] restored step {start_step} onto new mesh")
                 else:
                     state = jax.device_put(state, train_state_shardings(cfg))
+                    jax.block_until_ready(state)
+                    mode = "live"
+                    print(
+                        f"[train] no restorable checkpoint; live-resharded "
+                        f"step {start_step}"
+                    )
+                recoveries.append(
+                    {
+                        "mode": mode,
+                        "step": int(start_step),
+                        "seconds": time.perf_counter() - t_rec,
+                    }
+                )
             elif mgr is not None and args.resume and mgr.latest_step() is not None:
                 start_step, state = mgr.restore(abstract_train_state(cfg))
                 print(f"[train] resumed from step {start_step}")
@@ -184,7 +229,14 @@ def main(argv=None) -> dict:
     else:
         print("[train] nothing to do: start step >= --steps")
     final_step = int(state.step) if state is not None else start_step
-    return {"losses": losses, "final_step": final_step}
+    result = {"losses": losses, "final_step": final_step, "recoveries": recoveries}
+    if args.bench_out:
+        with open(args.bench_out, "w") as f:
+            json.dump(
+                {"recoveries": recoveries, "final_step": final_step}, f, indent=2
+            )
+        print(f"[train] wrote recovery timings to {args.bench_out}")
+    return result
 
 
 if __name__ == "__main__":

@@ -8,7 +8,13 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
+
 import repro.core as core
+
+# The quickstart subprocess compiles both backends and allows itself 300s;
+# the pytest-timeout cap must sit above that.
+pytestmark = pytest.mark.timeout(360)
 
 # frozen snapshot — PR 4 (codelet frontend) state
 EXPECTED = sorted([
@@ -19,9 +25,10 @@ EXPECTED = sorted([
     "SpReadArray", "SpWrite", "SpWriteArray", "SpWriteRef",
     # impl variants
     "SpCpu", "SpCuda", "SpHip", "SpHost", "SpImpl", "SpPallas", "SpRef",
-    # comm (PR 5: transport split + wire codec)
+    # comm (PR 5: transport split + wire codec; PR 6: failure detection)
     "ChannelHub", "SocketTransport", "SpTransport", "SpCommGroup",
     "SpCommError", "SpCommTimeoutError", "SpCommAbortedError",
+    "SpCommTransientError", "SpRankDeadError",
     "SpDeserializer", "SpSerializer", "decode_message", "default_hub",
     "encode_message", "register_wire_type", "reset_default_hub",
     "mpi_broadcast", "mpi_recv", "mpi_send",

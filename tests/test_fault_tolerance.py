@@ -1,0 +1,579 @@
+"""Fault tolerance end to end (ISSUE 6): typed comm-error hierarchy,
+dead-rank failure detection (EOF + heartbeat), deterministic fault
+injection, bounded retry with escalation, shrunken-ring collectives,
+rendezvous re-roll, and the SIGKILL acceptance run — a real OS process
+killed mid-``ring_all_reduce`` while the survivors finish."""
+from __future__ import annotations
+
+import socket
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChannelHub,
+    SocketTransport,
+    SpCommAbortedError,
+    SpCommError,
+    SpCommGroup,
+    SpCommTimeoutError,
+    SpCommTransientError,
+    SpComputeEngine,
+    SpData,
+    SpRankDeadError,
+    SpRead,
+    SpTaskGraph,
+    SpWorkerTeamBuilder,
+    SpWrite,
+    mpi_broadcast,
+    mpi_recv,
+    mpi_send,
+)
+from repro.dist.collectives import ring_all_reduce
+from repro.dist.fault import (
+    FailureSimulator,
+    FaultyTransport,
+    RetryingTransport,
+    remesh_plan,
+)
+from repro.launch.rendezvous import reroll_ranks, run_elastic_ring
+
+# The SIGKILL acceptance test spawns real OS ranks; raise the CI per-test cap.
+pytestmark = pytest.mark.timeout(180)
+
+
+@pytest.fixture()
+def engine():
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(4))
+    yield eng
+    eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# the consolidated error hierarchy: one base to catch them all
+# ---------------------------------------------------------------------------
+
+def test_every_comm_error_derives_from_sp_comm_error():
+    for exc_type in (
+        SpCommTimeoutError,
+        SpCommAbortedError,
+        SpRankDeadError,
+        SpCommTransientError,
+    ):
+        assert issubclass(exc_type, SpCommError), exc_type
+        assert isinstance(exc_type("x"), SpCommError)
+    # and the failure paths raise from it: dead-rank post...
+    hub = ChannelHub()
+    hub.mark_dead(1)
+    with pytest.raises(SpCommError):
+        hub.post((0, 1, "t"), 1)
+    # ...dead-rank poll...
+    with pytest.raises(SpCommError):
+        hub.poll((1, 0, "t"))
+    # ...and injected transients
+    ft = FaultyTransport(ChannelHub(), seed=0, flaky={1: 1})
+    with pytest.raises(SpCommError):
+        ft.post((0, 1, "t"), 1)
+
+
+# ---------------------------------------------------------------------------
+# dead-rank semantics on the mailbox layer
+# ---------------------------------------------------------------------------
+
+def test_dead_rank_post_and_poll_raise():
+    hub = ChannelHub()
+    hub.mark_dead(2)
+    assert hub.is_dead(2) and 2 in hub.dead_ranks
+    assert hub.death_detected_at(2) is not None
+    with pytest.raises(SpRankDeadError, match="rank 2"):
+        hub.post((0, 2, "x"), 1)
+    with pytest.raises(SpRankDeadError, match="rank 2"):
+        hub.poll((2, 0, "x"))
+
+
+def test_dead_rank_queued_messages_still_drain():
+    """Messages a rank posted before dying stay deliverable; only an empty
+    mailbox fails fast."""
+    hub = ChannelHub()
+    hub.post((2, 0, "x"), "last words")
+    hub.mark_dead(2)
+    ok, msg = hub.poll((2, 0, "x"))
+    assert ok and msg == "last words"
+    with pytest.raises(SpRankDeadError):
+        hub.poll((2, 0, "x"))
+
+
+def test_mark_dead_is_idempotent_and_reset_clears():
+    hub = ChannelHub()
+    hub.mark_dead(1)
+    stamp = hub.death_detected_at(1)
+    time.sleep(0.01)
+    hub.mark_dead(1)
+    assert hub.death_detected_at(1) == stamp  # first stamp sticks
+    hub.reset()
+    assert hub.dead_ranks == frozenset()
+
+
+def test_pending_recv_fails_fast_and_cancels_dependents(engine):
+    """A recv already in flight when the source dies must fail with
+    SpRankDeadError on the next comm tick — not wait out its timeout —
+    and its dependents must cancel transitively."""
+    hub = ChannelHub()
+    g1 = SpCommGroup(1, 2, hub)
+    tg = SpTaskGraph().compute_on(engine)
+    r, out = SpData(None, "r"), SpData("untouched", "out")
+    # generous timeout: if death were NOT detected, this test would hang
+    # far past its deadline — failing fast is the point
+    view = mpi_recv(tg, g1, r, src=0, tag="dead", timeout=60.0)
+    dep = tg.task(SpRead(r), SpWrite(out),
+                  lambda v, ref: setattr(ref, "value", v))
+    deadline = time.monotonic() + 5.0
+    while engine._comm is None and time.monotonic() < deadline:
+        time.sleep(0.005)
+    hub.mark_dead(0)
+    exc = view.exception(timeout=5.0)
+    assert isinstance(exc, SpRankDeadError)
+    assert "src=0" in str(exc)
+    tg.wait_all_tasks(timeout=5.0)
+    assert dep.state == "cancelled"
+    assert out.value == "untouched"
+
+
+def test_future_requests_to_dead_rank_fail_immediately(engine):
+    hub = ChannelHub()
+    hub.mark_dead(0)
+    g1 = SpCommGroup(1, 2, hub)
+    tg = SpTaskGraph().compute_on(engine)
+    r = SpData(None, "r")
+    view = mpi_recv(tg, g1, r, src=0, tag="late", timeout=60.0)
+    assert isinstance(view.exception(timeout=5.0), SpRankDeadError)
+    tg.wait_all_tasks(timeout=5.0)
+    # sends too
+    tg2 = SpTaskGraph().compute_on(engine)
+    m = SpData(1, "m")
+    view2 = mpi_send(tg2, SpCommGroup(1, 2, hub), m, dest=0, tag="s")
+    assert isinstance(view2.exception(timeout=5.0), SpRankDeadError)
+    tg2.wait_all_tasks(timeout=5.0)
+
+
+# ---------------------------------------------------------------------------
+# fault injection: deterministic schedules, dedup, retry, escalation
+# ---------------------------------------------------------------------------
+
+def _fault_schedule(seed: int, n: int = 60):
+    ft = FaultyTransport(
+        ChannelHub(), seed=seed,
+        drop=0.3, duplicate=0.2, delay=0.1, truncate=0.1, delay_s=0.001,
+    )
+    outcomes = []
+    for i in range(n):
+        try:
+            ft.post((0, 1, i), i)
+            outcomes.append("ok")
+        except SpCommTransientError:
+            outcomes.append("transient")
+    return outcomes, dict(ft.injected)
+
+
+def test_faulty_transport_schedule_is_deterministic():
+    o1, c1 = _fault_schedule(42)
+    o2, c2 = _fault_schedule(42)
+    o3, _ = _fault_schedule(43)
+    assert o1 == o2 and c1 == c2
+    assert o3 != o1  # a different seed injects a different schedule
+    assert c1["dropped"] > 0 and c1["truncated"] > 0  # faults actually fired
+
+
+def test_faulty_transport_dedups_duplicates_and_discards_corrupt():
+    hub = ChannelHub()
+    ft = FaultyTransport(hub, seed=7, duplicate=1.0)  # every post doubled
+    for i in range(10):
+        ft.post((0, 1, i), i)
+    for i in range(10):
+        ok, msg = ft.poll((0, 1, i))
+        assert ok and msg == i
+        ok, _ = ft.poll((0, 1, i))  # the duplicate is filtered, not delivered
+        assert not ok
+    assert ft.injected["duplicated"] == 10
+    assert ft.injected["deduped"] == 10
+
+
+def test_retrying_transport_absorbs_transients():
+    hub = ChannelHub()
+    ft = FaultyTransport(hub, seed=1, drop=0.4, delay_s=0.001)
+    rt = RetryingTransport(ft, max_retries=25, backoff=0.0002)
+    for i in range(30):
+        rt.post((0, 1, i), {"v": i})
+    for i in range(30):
+        ok, msg = ft.poll((0, 1, i))
+        assert ok and msg["v"] == i
+    assert rt.retries > 0  # drops actually happened and were retried
+    assert rt.escalations == 0
+
+
+def test_retrying_transport_flaky_rank_recovers():
+    ft = FaultyTransport(ChannelHub(), seed=0, flaky={1: 3})
+    rt = RetryingTransport(ft, max_retries=5, backoff=0.0001)
+    rt.post((0, 1, "a"), 1)  # 3 injected failures, then the rank recovers
+    assert rt.retries == 3
+    ok, msg = ft.poll((0, 1, "a"))
+    assert ok and msg == 1
+
+
+def test_retry_budget_exhaustion_escalates_to_rank_dead():
+    hub = ChannelHub()
+    ft = FaultyTransport(hub, seed=0, flaky={2: 100})
+    rt = RetryingTransport(ft, max_retries=3, backoff=0.0001)
+    with pytest.raises(SpRankDeadError, match="rank 2"):
+        rt.post((0, 2, "x"), 1)
+    assert rt.escalations == 1
+    assert hub.is_dead(2)  # escalation is recorded on the inner transport
+    with pytest.raises(SpRankDeadError):  # and sticks for future posts
+        rt.post((0, 2, "y"), 1)
+
+
+def test_faulty_kill_plan_marks_rank_dead():
+    ft = FaultyTransport(ChannelHub(), seed=0, kill_plan={2: 5})
+    ft.post((0, 1, 0), 0)
+    ft.post((0, 1, 1), 1)
+    with pytest.raises(SpRankDeadError):
+        ft.post((0, 5, 2), 2)  # post ordinal 2 kills rank 5 first
+    assert ft.is_dead(5)
+
+
+def test_ring_all_reduce_survives_injected_faults(engine):
+    """The full stack: ring all-reduce over Retrying(Faulty(hub)) with
+    drops and duplicates — the numerics must come out exact."""
+    size = 3
+    hub = ChannelHub()
+    rng = np.random.default_rng(3)
+    arrays = [rng.standard_normal(17).astype(np.float32) for _ in range(size)]
+    transports = [
+        RetryingTransport(
+            FaultyTransport(hub, seed=r, drop=0.15, duplicate=0.15,
+                            delay=0.1, delay_s=0.001),
+            max_retries=30, backoff=0.0002,
+        )
+        for r in range(size)
+    ]
+    groups = [
+        SpCommGroup(r, size, transports[r], default_timeout=60.0)
+        for r in range(size)
+    ]
+    graphs = [SpTaskGraph().compute_on(engine) for _ in range(size)]
+    cells = [SpData(arrays[r].copy(), f"f{r}") for r in range(size)]
+    for r in range(size):
+        ring_all_reduce(graphs[r], groups[r], cells[r], op="sum")
+    for g in graphs:
+        g.wait_all_tasks(timeout=120.0)
+    expected = np.sum(np.stack(arrays).astype(np.float64), axis=0)
+    for r in range(size):
+        np.testing.assert_allclose(cells[r].value, expected, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# socket-transport failure detection: EOF and heartbeat
+# ---------------------------------------------------------------------------
+
+def test_socket_eof_death_detection_and_survivor_traffic():
+    """An abrupt hangup without the goodbye frame (what a SIGKILL looks
+    like on the wire) is declared dead by the router and broadcast to every
+    survivor — in milliseconds, not after any timeout — while surviving
+    pairs keep exchanging frames."""
+    t0 = SocketTransport(0, 3)
+    t1 = SocketTransport(1, 3, port=t0.port)
+    t2 = SocketTransport(2, 3, port=t0.port)
+    try:
+        t2._hb_stop.set()
+        with pytest.warns(RuntimeWarning, match="dead"):
+            t2._sock.shutdown(socket.SHUT_RDWR)  # FIN without a bye
+            gone_t = time.monotonic()
+            deadline = gone_t + 5.0
+            while not (t0.is_dead(2) and t1.is_dead(2)):
+                assert time.monotonic() < deadline, "death never detected"
+                time.sleep(0.002)
+        assert t0.death_detected_at(2) is not None
+        with pytest.raises(SpRankDeadError):
+            t0.poll((2, 0, "never"))
+        with pytest.raises(SpRankDeadError):
+            t1.post((1, 2, "x"), 1)
+        # the surviving pair still talks through the router
+        t0.post((0, 1, "z"), 7)
+        deadline = time.monotonic() + 5.0
+        while True:
+            ok, msg = t1.poll((0, 1, "z"))
+            if ok:
+                break
+            assert time.monotonic() < deadline
+            time.sleep(0.002)
+        assert msg == 7
+    finally:
+        t0.close()
+        t1.close()
+        t2.close()
+
+
+def test_socket_heartbeat_staleness_death_detection():
+    """A rank whose socket stays open but whose heartbeats stop (wedged
+    process) is declared dead by the router's monitor within
+    O(heartbeat_timeout)."""
+    ta = SocketTransport(0, 2, heartbeat_interval=0.05, heartbeat_timeout=0.4)
+    tb = SocketTransport(
+        1, 2, port=ta.port, heartbeat_interval=0.05, heartbeat_timeout=0.4
+    )
+    try:
+        time.sleep(0.15)  # let a few heartbeats land
+        with pytest.warns(RuntimeWarning, match="no heartbeat"):
+            tb._hb_stop.set()  # wedge: TCP alive, heartbeats gone
+            stale_t = time.monotonic()
+            deadline = stale_t + 5.0
+            while not ta.is_dead(1):
+                assert time.monotonic() < deadline, "staleness never detected"
+                time.sleep(0.005)
+        latency = ta.death_detected_at(1) - stale_t
+        assert latency < 2.0  # O(heartbeat_timeout), far below any comm timeout
+    finally:
+        ta.close()
+        tb.close()
+
+
+def test_socket_dial_failure_is_bounded_and_names_the_address():
+    """The dial loop must give up after its bounded retry budget with an
+    SpCommError naming the rendezvous address — not spin forever."""
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        free_port = s.getsockname()[1]
+    # nobody listens on free_port: rank 1 dials a dead rendezvous
+    t0 = time.monotonic()
+    with pytest.raises(SpCommError, match=rf"127\.0\.0\.1:{free_port}"):
+        SocketTransport(
+            1, 2, port=free_port, connect_timeout=0.5, max_dial_retries=5
+        )
+    assert time.monotonic() - t0 < 5.0
+
+
+# ---------------------------------------------------------------------------
+# shrunken groups + re-roll agreement
+# ---------------------------------------------------------------------------
+
+def test_group_members_and_shrunk():
+    hub = ChannelHub()
+    g = SpCommGroup(2, 4, hub)
+    assert g.members == (0, 1, 2, 3)
+    assert (g.logical_rank, g.logical_size) == (2, 4)
+    s = g.shrunk([1, 3])
+    assert s.members == (0, 2)
+    assert (s.logical_rank, s.logical_size) == (1, 2)
+    assert s.to_physical(s.logical_rank + 1) == 0  # ring wraps over members
+    with pytest.raises(SpCommError):
+        g.shrunk([2])  # cannot shrink away yourself
+    with pytest.raises(ValueError):
+        SpCommGroup(5, 4, hub, members=(0, 1))  # rank must be a member
+
+
+def test_ring_all_reduce_on_shrunken_group(engine):
+    """After 'losing' rank 1 of 3, the survivors' shrunken groups still form
+    a closed logical ring and the reduce is bit-exact (2-rank float32 sums
+    are order-independent)."""
+    hub = ChannelHub()
+    arrays = {
+        r: np.random.default_rng(r).standard_normal(13).astype(np.float32)
+        for r in (0, 2)
+    }
+    groups = {
+        r: SpCommGroup(r, 3, hub, default_timeout=30.0).shrunk([1])
+        for r in (0, 2)
+    }
+    graphs = {r: SpTaskGraph().compute_on(engine) for r in (0, 2)}
+    cells = {r: SpData(arrays[r].copy(), f"s{r}") for r in (0, 2)}
+    for r in (0, 2):
+        ring_all_reduce(graphs[r], groups[r], cells[r], op="sum")
+    for g in graphs.values():
+        g.wait_all_tasks(timeout=60.0)
+    expected = arrays[0] + arrays[2]
+    for r in (0, 2):
+        np.testing.assert_array_equal(cells[r].value, expected)
+
+
+def test_broadcast_on_shrunken_group(engine):
+    hub = ChannelHub()
+    groups = {
+        r: SpCommGroup(r, 3, hub, default_timeout=30.0).shrunk([1])
+        for r in (0, 2)
+    }
+    graphs = {r: SpTaskGraph().compute_on(engine) for r in (0, 2)}
+    cells = {
+        r: SpData(np.arange(4.0) if r == 0 else None, f"b{r}") for r in (0, 2)
+    }
+    for r in (0, 2):
+        mpi_broadcast(graphs[r], groups[r], cells[r], root=0)
+    for g in graphs.values():
+        g.wait_all_tasks(timeout=60.0)
+    np.testing.assert_array_equal(cells[2].value, np.arange(4.0))
+    # the dead rank got nothing: no mailbox keyed to it lingers
+    assert not any(key[1] == 1 for key in hub._boxes)
+
+
+def test_reroll_ranks_agreement():
+    """Survivors with the same dead-set view agree in two rounds and come
+    out with the shrunken group plus each other's payloads."""
+    import threading
+
+    hub = ChannelHub()
+    hub.mark_dead(2)
+    groups = {r: SpCommGroup(r, 3, hub, default_timeout=30.0) for r in (0, 1)}
+    out: dict = {}
+
+    def roll(r, payload):
+        out[r] = reroll_ranks(
+            groups[r], epoch=1, payload=payload, timeout=10.0
+        )
+
+    threads = [
+        threading.Thread(target=roll, args=(0, {"next_step": 5})),
+        threading.Thread(target=roll, args=(1, {"next_step": 4})),
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=15.0)
+    assert set(out) == {0, 1}
+    for r in (0, 1):
+        new_group, dead, payloads = out[r]
+        assert dead == frozenset({2})
+        assert new_group.members == (0, 1)
+        assert {p["next_step"] for p in payloads.values()} == {4, 5}
+        assert min(p["next_step"] for p in payloads.values()) == 4
+
+
+# ---------------------------------------------------------------------------
+# the acceptance run: SIGKILL a real OS rank mid-collective
+# ---------------------------------------------------------------------------
+
+def test_sigkill_rank_mid_all_reduce_survivors_finish():
+    """Three real OS processes ring-all-reduce over TCP; the parent SIGKILLs
+    rank 2 mid-collective.  The survivors must detect the death via the
+    failure detector (milliseconds — far below the 30s comm timeout),
+    agree on the dead set, re-mesh to a 2-rank ring, redo the interrupted
+    step, and finish all steps with bit-exact results."""
+    n, steps = 257, 4
+    results, info = run_elastic_ring(size=3, n=n, steps=steps, fail_at=2)
+    assert set(results) == {0, 1}
+
+    bases = [
+        np.random.default_rng(r).standard_normal(n).astype(np.float32)
+        for r in range(3)
+    ]
+    full = bases[0] + bases[1] + bases[2]
+    surviving = bases[0] + bases[1]
+
+    resumes = {rep["resume_step"] for rep in results.values()}
+    assert len(resumes) == 1, f"survivors disagree on the resume step: {resumes}"
+    resume = resumes.pop()
+    assert resume is not None and 0 <= resume < steps
+
+    for rank, rep in results.items():
+        assert rep["dead"] == [2]
+        assert rep["members"] == [0, 1]
+        # detection came from the failure detector, not the 30s recv timeout
+        latency = rep["detect_at"] - info["t_kill"]
+        assert -0.05 < latency < 5.0, f"rank {rank}: detection took {latency}s"
+        assert rep["reroll_s"] < 30.0
+        assert sorted(rep["steps"]) == list(range(steps))
+        for step, arr in rep["steps"].items():
+            if step < resume:  # full-mesh steps: 3-way sums, order-dependent
+                np.testing.assert_allclose(arr, full, rtol=1e-5, atol=1e-6)
+            else:  # shrunken mesh: 2-way float32 sums are bit-exact
+                np.testing.assert_array_equal(arr, surviving)
+    # both survivors computed identical bits everywhere
+    for step in results[0]["steps"]:
+        np.testing.assert_array_equal(
+            results[0]["steps"][step], results[1]["steps"][step]
+        )
+
+
+# ---------------------------------------------------------------------------
+# FailureSimulator + remesh_plan edge cases
+# ---------------------------------------------------------------------------
+
+def test_failure_simulator_fires_once_and_counts():
+    sim = FailureSimulator({0: 2, 3: 1})
+    assert sim.check(0) == 2  # failure at step 0 is legal
+    assert sim.check(0) == 0  # and fires exactly once
+    assert sim.check(1) == 0
+    assert sim.check(3) == 1
+    assert sim.total_lost == 3
+    assert sim.events == [(0, 2), (3, 1)]
+
+
+def test_failure_simulator_flaky_recovers():
+    sim = FailureSimulator({}, flaky={2: 3})
+    assert not sim.flaky_down(0)
+    assert not sim.flaky_down(1)
+    assert sim.flaky_down(2)  # outage starts
+    assert sim.flaky_down(3)
+    assert sim.flaky_down(4)
+    assert not sim.flaky_down(5)  # recovered
+    assert not sim.flaky_down(6)
+    assert sim.flaky_events == [(2, 5)]
+    assert sim.total_lost == 0  # transient outages are not deaths
+
+
+def test_remesh_plan_all_ranks_lost_raises():
+    with pytest.raises(RuntimeError, match="reschedule"):
+        remesh_plan(8, 8, model_parallel=2)
+
+
+def test_remesh_plan_below_model_parallel_raises():
+    # 3 survivors cannot host a model axis of 4 — must raise, not emit a
+    # degenerate mesh
+    with pytest.raises(RuntimeError, match="model_parallel=4"):
+        remesh_plan(8, 5, model_parallel=4)
+
+
+def test_remesh_plan_idles_remainder_chips():
+    plan = remesh_plan(8, 3, model_parallel=2)  # 5 alive -> 2x2 mesh, 1 idle
+    assert plan.shape == (2, 2)
+    assert plan.n_chips == 4
+    assert plan.dropped_chips == 4  # 3 failed + 1 idled
+
+
+# ---------------------------------------------------------------------------
+# engine.stop() idempotence (recovery path + atexit may both call it)
+# ---------------------------------------------------------------------------
+
+def test_engine_stop_is_idempotent():
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(2))
+    tg = SpTaskGraph().compute_on(eng)
+    out = SpData(None, "out")
+    tg.task(SpWrite(out), lambda ref: setattr(ref, "value", 1))
+    tg.wait_all_tasks(timeout=10.0)
+    first = eng.stop()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # a second stop must not re-warn
+        second = eng.stop()
+        third = eng.stop()
+    assert first == second == third == []
+
+
+def test_engine_stop_idempotent_with_aborted_requests():
+    """The first stop's abort report is cached: a second stop returns the
+    same names instead of re-cancelling (or losing) them."""
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(1))
+    hub = ChannelHub()
+    g1 = SpCommGroup(1, 2, hub)
+    tg = SpTaskGraph().compute_on(eng)
+    r = SpData(None, "r")
+    mpi_recv(tg, g1, r, src=0, tag=13)  # never satisfied
+    deadline = time.monotonic() + 5.0
+    while eng._comm is None and time.monotonic() < deadline:
+        time.sleep(0.005)
+    with pytest.warns(RuntimeWarning, match="in-flight"):
+        first = eng.stop()
+    assert first == ["recv(from=0,tag=13)"]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert eng.stop() == first
+    tg.wait_all_tasks(timeout=5.0, raise_errors=False)

@@ -19,6 +19,9 @@ from repro.models import (
 )
 from repro.runtime.serve import prime_cache
 
+# JAX compile time per architecture dominates; raise the CI per-test cap.
+pytestmark = pytest.mark.timeout(180)
+
 B, L = 2, 32
 
 

@@ -8,6 +8,12 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+# Each test spawns a fresh interpreter that compiles sharded train steps on
+# 8 virtual devices; raise the CI per-test cap.
+pytestmark = pytest.mark.timeout(300)
+
 SCRIPT = textwrap.dedent(
     """
     import os

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.timeout(120)
+
 from repro.configs import reduced_config
 from repro.models import decode_step, init_cache, init_params, prefill
 from repro.runtime.serve import prime_cache

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.timeout(120)
+
 from repro.configs import reduced_config
 from repro.data import SyntheticLMDataset
 from repro.models.config import ShapeSpec
