@@ -16,6 +16,10 @@ Entries:
 * engine_scaling — worker-team scaling
 * train_step_smoke — staged train step wall time (reduced arch)
 * roofline_summary — per-cell dominant terms (from experiments/, if present)
+* serving_continuous / serving_drain — serving tier under seeded Poisson
+  load, persisted to ``BENCH_serving.json`` (``--smoke`` also runs this
+  section and, with ``--serving-baseline``, exits non-zero on a >2×
+  continuous-mode throughput regression)
 """
 from __future__ import annotations
 
@@ -70,6 +74,31 @@ def _engine_section(smoke: bool, out: str, baseline: str | None) -> None:
             sys.exit(1)
 
 
+def _serving_section(smoke: bool, out: str, baseline: str | None) -> None:
+    """Serving-tier load test (BENCH_serving.json) + CI regression gate."""
+    from benchmarks import serving_bench
+
+    payload = serving_bench.run_suite(smoke=smoke)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    for r in payload["modes"]:
+        _row(
+            f"serving_{r['mode']}",
+            1e6 / r["tokens_per_s"] if r["tokens_per_s"] else 0.0,
+            f"tokens_per_s={r['tokens_per_s']:.1f}"
+            f";ttft_p99_ms={r['ttft_p99_ms']:.1f}"
+            f";itl_p99_ms={r['itl_p99_ms']:.1f}",
+        )
+    if baseline and os.path.exists(baseline):
+        with open(baseline) as f:
+            base = json.load(f)
+        failures = serving_bench.compare_against_baseline(payload, base)
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr, flush=True)
+        if failures:
+            sys.exit(1)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="larger sweeps")
@@ -84,12 +113,24 @@ def main() -> None:
         default=None,
         help="checked-in BENCH_engine.json to gate dispatch overhead against",
     )
+    ap.add_argument(
+        "--serving-out",
+        default="BENCH_serving.json",
+        help="serving bench JSON path",
+    )
+    ap.add_argument(
+        "--serving-baseline",
+        default=None,
+        help="checked-in BENCH_serving.json to gate serving throughput against",
+    )
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
 
     # ---- engine hot path (BENCH_engine.json trajectory) -------------------
     _engine_section(args.smoke, args.out, args.baseline)
+    # ---- serving tier (BENCH_serving.json trajectory) ---------------------
+    _serving_section(args.smoke, args.serving_out, args.serving_baseline)
     if args.smoke:
         return
 

@@ -1,0 +1,143 @@
+"""Serving benchmark → ``BENCH_serving.json`` (continuous batching vs the
+drain-barrier baseline).
+
+One seeded Poisson workload (``repro.serving.loadgen``) is replayed through
+two fresh, identically-built engines:
+
+* ``continuous`` — requests join the decode batch the moment they arrive
+  (the persistent-task-graph scheduler this PR introduces);
+* ``drain`` — the removed policy (static batching): up to ``n_slots``
+  arrived requests form a generation once the engine is idle, and that
+  batch runs to completion before the next is admitted.
+
+Reported per mode: offered-load-normalized throughput (tokens/s), p50/p99
+time-to-first-token, p50/p99 inter-token latency.  The CI smoke gate
+(:func:`compare_against_baseline`) fails on a >``factor``× tokens/s drop of
+the *continuous* row vs the checked-in ``BENCH_serving.json``; the
+continuous-beats-drain comparison is recorded in the payload so the
+trajectory is auditable, but is not gated in smoke (container noise).
+
+Engine geometry uses ``block_size=4`` with prompt lengths ≡ 1 (mod 4) so a
+duplicated prompt's first ``len-1`` tokens are block-aligned — the paged
+pool can serve repeat prompts from saved KV rows (restore) instead of
+re-running prefill, which is part of what the benchmark measures.
+"""
+from __future__ import annotations
+
+import json
+
+PROMPT_LENS = (5, 9, 13, 17)
+
+
+def _build_engine():
+    from repro.configs import reduced_config
+    from repro.models import init_params
+    from repro.serving import ServeEngine
+
+    import jax
+
+    cfg = reduced_config("deepseek-7b").replace(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return ServeEngine(
+        cfg,
+        params,
+        n_slots=6,
+        max_seq=112,
+        block_size=4,
+        max_queue=64,
+    )
+
+
+def run_suite(smoke: bool = False) -> dict:
+    from repro.serving import LoadSpec, build_workload
+    from repro.serving.loadgen import run_load
+
+    # offered load is deliberately above the drain-mode service rate, with
+    # high-variance output lengths: the barrier then holds freed slots idle
+    # until each generation's longest sequence finishes (tokens/s loss) and
+    # queues late arrivals behind whole generations (TTFT loss) — exactly
+    # the utilization continuous batching recovers
+    spec = LoadSpec(
+        seed=7,
+        n_requests=12 if smoke else 32,
+        rate_rps=400.0,
+        prompt_lens=PROMPT_LENS,
+        out_lens=(8, 16, 80),
+        vocab=64,
+        dup_frac=0.3,
+    )
+    workload = build_workload(spec)
+    modes = []
+    for mode in ("continuous", "drain"):
+        with _build_engine() as eng:
+            modes.append(run_load(eng, workload, mode=mode, spec=spec))
+    cont, drain = modes
+    return {
+        "spec": {
+            "seed": spec.seed,
+            "n_requests": spec.n_requests,
+            "rate_rps": spec.rate_rps,
+            "prompt_lens": list(spec.prompt_lens),
+            "out_lens": list(spec.out_lens),
+            "dup_frac": spec.dup_frac,
+            "smoke": smoke,
+        },
+        "modes": modes,
+        "comparison": {
+            "throughput_ratio": (
+                cont["tokens_per_s"] / drain["tokens_per_s"]
+                if drain["tokens_per_s"]
+                else 0.0
+            ),
+            "ttft_p99_ratio": (
+                cont["ttft_p99_ms"] / drain["ttft_p99_ms"]
+                if drain["ttft_p99_ms"]
+                else 0.0
+            ),
+            "continuous_wins": (
+                cont["tokens_per_s"] > drain["tokens_per_s"]
+                and cont["ttft_p99_ms"] < drain["ttft_p99_ms"]
+            ),
+        },
+    }
+
+
+def compare_against_baseline(
+    current: dict, baseline: dict, factor: float = 2.0
+) -> list[str]:
+    """CI gate: continuous-mode throughput must stay within ``factor``× of
+    the checked-in baseline.  Returns human-readable failures (empty = pass)."""
+    base_by_mode = {r["mode"]: r for r in baseline.get("modes", ())}
+    failures = []
+    for row in current.get("modes", ()):
+        if row["mode"] != "continuous":
+            continue
+        base = base_by_mode.get(row["mode"])
+        if base is None or not base.get("tokens_per_s"):
+            continue
+        if row["tokens_per_s"] < base["tokens_per_s"] / factor:
+            failures.append(
+                f"serving throughput regression ({row['mode']}): "
+                f"{row['tokens_per_s']:.1f} tok/s vs baseline "
+                f"{base['tokens_per_s']:.1f} tok/s (<1/{factor:.1f}x)"
+            )
+    return failures
+
+
+def main(out: str = "BENCH_serving.json", smoke: bool = False) -> dict:
+    payload = run_suite(smoke=smoke)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print("mode,tokens_per_s,ttft_p50_ms,ttft_p99_ms,itl_p50_ms,itl_p99_ms")
+    for r in payload["modes"]:
+        print(
+            f"{r['mode']},{r['tokens_per_s']:.1f},{r['ttft_p50_ms']:.1f},"
+            f"{r['ttft_p99_ms']:.1f},{r['itl_p50_ms']:.1f},{r['itl_p99_ms']:.1f}"
+        )
+    return payload
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(smoke="--smoke" in sys.argv)

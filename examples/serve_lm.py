@@ -1,8 +1,10 @@
-"""Batched serving example (deliverable b): prefill a batch of prompts,
-prime the decode caches, and greedily decode — showing that the model
-reproduces the synthetic affine-rule continuation after a quick fit.
+"""Serving example: fit a small model on the synthetic affine rule, then
+serve a batch of prompts through the continuous-batching ServeEngine —
+paged KV cache, prefix sharing (one request duplicates a prompt and shares
+its blocks), and per-request sampling controls.
 
     PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --temperature 0.8 --top-k 20 --seed 7
 """
 from __future__ import annotations
 
@@ -14,10 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import SyntheticLMDataset
-from repro.models import prefill
 from repro.models.config import ArchConfig, ShapeSpec
-from repro.runtime.serve import build_decode_fn, prime_cache
 from repro.runtime.train import build_train_step, init_train_state
+from repro.serving import ServeEngine
 
 CFG = ArchConfig(
     name="serve-demo", family="dense", n_layers=4, d_model=192, n_heads=6,
@@ -32,6 +33,10 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt", type=int, default=24)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples from the scaled distribution")
+    ap.add_argument("--top-k", type=int, default=0, help="0 = no top-k filter")
+    ap.add_argument("--seed", type=int, default=0, help="per-request PRNG seed base")
     args = ap.parse_args()
 
     shape = ShapeSpec("t", "train", 64, args.batch)
@@ -45,31 +50,58 @@ def main() -> None:
         state, m = art(state, batch)
     print(f"[serve] fitted {args.fit_steps} steps, loss={float(m['loss']):.3f}")
 
-    # ---- serve a batch of requests ----------------------------------------
+    # ---- serve the prompts through the continuous-batching engine ---------
     eval_batch = ds.batch_for_step(10_000)
-    prompts = jnp.asarray(eval_batch["tokens"][:, : args.prompt])
+    prompts = np.asarray(eval_batch["tokens"][:, : args.prompt], np.int32)
     gold = np.asarray(eval_batch["tokens"][:, args.prompt : args.prompt + args.gen])
 
-    prefill_fn = jax.jit(lambda p, b: prefill(p, b, CFG))
-    decode_fn = build_decode_fn(CFG)
+    with ServeEngine(
+        CFG,
+        state.params,
+        n_slots=args.batch + 1,
+        max_seq=args.prompt + args.gen,
+        block_size=4,
+    ) as eng:
+        t0 = time.perf_counter()
+        reqs = [
+            eng.submit(
+                prompts[i],
+                args.gen,
+                temperature=args.temperature,
+                top_k=args.top_k,
+                seed=args.seed + i,
+            )
+            for i in range(args.batch)
+        ]
+        # a duplicate of prompt 0: its KV blocks are shared, not recomputed
+        dup = eng.submit(
+            prompts[0], args.gen,
+            temperature=args.temperature, top_k=args.top_k, seed=args.seed,
+        )
+        eng.run_until_drained()
+        dt = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    logits, caches = prefill_fn(state.params, {"tokens": prompts})
-    max_seq = args.prompt + args.gen
-    caches = prime_cache(CFG, caches, args.prompt, max_seq)
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    generated = [tok]
-    for s in range(args.gen - 1):
-        tok, caches = decode_fn(state.params, tok, caches, jnp.int32(args.prompt + s))
-    # decode_fn returns argmax tokens directly
-        generated.append(tok)
-    out = np.concatenate([np.asarray(t) for t in generated], axis=1)
-    dt = time.perf_counter() - t0
-    acc = float((out == gold).mean())
-    toks_per_s = args.batch * args.gen / dt
-    print(f"[serve] generated {args.batch}x{args.gen} tokens in {dt * 1e3:.0f}ms "
-          f"({toks_per_s:.0f} tok/s), continuation accuracy vs rule: {acc:.2%}")
-    assert acc > 0.5, "a fitted model should continue the affine rule"
+        out = np.stack([r.out_tokens for r in reqs])
+        acc = float((out == gold).mean())
+        stats = eng.stats()
+        pool = stats["pool"]
+        toks = sum(len(r.out_tokens) for r in reqs) + len(dup.out_tokens)
+        print(
+            f"[serve] {args.batch}+1 requests × {args.gen} tokens in "
+            f"{dt * 1e3:.0f}ms ({toks / dt:.0f} tok/s), "
+            f"{stats['steps']} engine iterations, {stats['prefills']} prefills"
+        )
+        print(
+            f"[serve] paged pool: {pool['live_blocks']}/{pool['n_blocks']} blocks, "
+            f"{pool['shared_hits']} shared-block hits, {pool['cow_copies']} COW copies"
+        )
+        print(f"[serve] continuation accuracy vs rule: {acc:.2%}")
+        assert pool["shared_hits"] > 0, "duplicate prompt should share KV blocks"
+        if args.temperature == 0.0:
+            assert dup.out_tokens == reqs[0].out_tokens, (
+                "greedy decode of a shared prompt must match"
+            )
+            assert acc > 0.5, "a fitted model should continue the affine rule"
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 randomly initialized model.
 
     PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \
-        --requests 6 --slots 2 --gen 8
+        --requests 6 --slots 2 --gen 8 --temperature 0.7 --top-k 40
 """
 from __future__ import annotations
 
@@ -13,7 +13,6 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced_config
-from repro.core import trace_metrics
 from repro.models import init_params
 from repro.serving import ServeEngine
 
@@ -27,35 +26,57 @@ def main(argv=None) -> dict:
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
 
-    eng = ServeEngine(cfg, params, n_slots=args.slots, max_seq=args.max_seq)
-    try:
+    with ServeEngine(
+        cfg,
+        params,
+        n_slots=args.slots,
+        max_seq=args.max_seq,
+        block_size=args.block_size,
+    ) as eng:
         t0 = time.perf_counter()
         reqs = [
             eng.submit(
                 rng.integers(0, cfg.vocab, size=args.prompt_len).astype(np.int32),
                 args.gen,
+                temperature=args.temperature,
+                top_k=args.top_k,
+                seed=args.seed + i,
             )
-            for _ in range(args.requests)
+            for i in range(args.requests)
         ]
         eng.run_until_drained()
         dt = time.perf_counter() - t0
         total_toks = sum(len(r.out_tokens) for r in reqs)
+        stats = eng.stats()
+        pool = stats["pool"]
         print(
             f"[serve] {args.requests} requests × {args.gen} tokens on "
             f"{args.slots} slots: {total_toks} tokens in {dt * 1e3:.0f}ms "
-            f"({total_toks / dt:.0f} tok/s), {eng.pool.evictions} LRU evictions, "
-            f"{eng.steps} engine iterations"
+            f"({total_toks / dt:.0f} tok/s), {stats['steps']} engine iterations"
+        )
+        print(
+            f"[serve] admissions: {stats['admitted']} admitted, "
+            f"{stats['prefills']} prefills, {stats['restores']} restores, "
+            f"{stats['preemptions']} preemptions; pool "
+            f"{pool['live_blocks']}/{pool['n_blocks']} blocks live, "
+            f"{pool['shared_hits']} shared hits, {pool['evictions']} evictions"
         )
         assert all(r.done for r in reqs)
-        return {"tok_per_s": total_toks / dt, "evictions": eng.pool.evictions}
-    finally:
-        eng.close()
+        return {
+            "tok_per_s": total_toks / dt,
+            "evictions": pool["evictions"],
+            "stats": stats,
+        }
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ from repro.models.transformer import (
     abstract_cache,
     abstract_inputs,
     abstract_params,
+    cache_layout,
     decode_step,
     forward,
     init_cache,
@@ -26,7 +27,7 @@ from repro.models.transformer import (
 __all__ = [
     "ArchConfig", "HybridConfig", "MLAConfig", "MoEConfig", "SHAPES",
     "ShapeSpec", "SSMConfig", "applicable_shapes", "abstract_cache",
-    "abstract_inputs", "abstract_params", "decode_step", "forward",
-    "init_cache", "init_params", "input_defs", "loss_fn", "model_defs",
-    "param_shardings", "prefill",
+    "abstract_inputs", "abstract_params", "cache_layout", "decode_step",
+    "forward", "init_cache", "init_params", "input_defs", "loss_fn",
+    "model_defs", "param_shardings", "prefill",
 ]

@@ -507,6 +507,29 @@ def cache_defs(cfg: ArchConfig, batch: int, max_seq: int) -> dict:
     return stack_defs(_cache_defs_for_kind(cfg, kind, batch, max_seq), cfg.n_layers)
 
 
+def cache_layout(cfg: ArchConfig) -> Optional[dict]:
+    """Per-leaf ``(batch_axis, seq_axis)`` of the *stacked* decode caches —
+    the plumbing the paged serving tier needs to slice per-token KV rows
+    into block tables (``serving/kvcache.py``).
+
+    Returns None when the family's decode cache has no per-token rows to
+    page: ssm/rec carry a recurrent state (one vector per sequence, not per
+    token), ring-buffered windowed attention folds positions modulo the
+    window, and hybrid stacks mix both.  The serving engine falls back to
+    logical block accounting only (no payload save/restore) in that case.
+    """
+    if cfg.family == "hybrid":
+        return None
+    kind = block_kind(cfg)
+    if kind in ("ssm", "rec"):
+        return None
+    if cfg.attn_window is not None:
+        return None
+    # stacked caches: axis 0 = layer, 1 = batch (slot), 2 = sequence
+    names = ("c_kv", "k_rope") if cfg.mla is not None else ("k", "v")
+    return {n: (1, 2) for n in names}
+
+
 def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
     defs = cache_defs(cfg, batch, max_seq)
 

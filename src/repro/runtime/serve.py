@@ -79,6 +79,40 @@ def prime_cache(cfg: ArchConfig, prefill_caches, prompt_len: int, max_seq: int):
     return jax.vmap(lambda c: prime_kind(c, kind_cfg))(prefill_caches)
 
 
+# ---------------------------------------------------------------------------
+# Paged-cache row plumbing (serving tier).  Valid for families whose
+# ``models.cache_layout(cfg)`` is non-None: stacked caches with axis 0 =
+# layer, 1 = batch slot, 2 = sequence row.
+# ---------------------------------------------------------------------------
+
+def extract_cache_rows(caches, slot: int, start: int, stop: int):
+    """Copy rows ``[start:stop)`` of one batch slot out of every cache leaf
+    as host numpy arrays — the payload stored on a KV block at writeback."""
+    import numpy as np
+
+    return jax.tree.map(lambda leaf: np.asarray(leaf[:, slot, start:stop]), caches)
+
+
+def insert_cache_rows(caches, slot: int, rows, start: int = 0):
+    """Scatter payload ``rows`` (as produced by :func:`extract_cache_rows`,
+    possibly concatenated along the row axis) back into one batch slot."""
+
+    def put(full, r):
+        r = jnp.asarray(r).astype(full.dtype)
+        return full.at[:, slot, start : start + r.shape[1]].set(r)
+
+    return jax.tree.map(put, caches, rows)
+
+
+def concat_cache_rows(payloads):
+    """Concatenate per-block payloads (ordered) along the row axis."""
+    import numpy as np
+
+    if len(payloads) == 1:
+        return payloads[0]
+    return jax.tree.map(lambda *xs: np.concatenate(xs, axis=1), *payloads)
+
+
 def build_prefill_fn(cfg: ArchConfig, *, jit: bool = True):
     def prefill_fn(params, batch):
         logits, caches = prefill(params, batch, cfg)

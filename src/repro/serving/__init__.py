@@ -1,4 +1,31 @@
-from .kvcache import KVPagePool, PageError
-from .engine import ServeEngine, Request
+"""Serving tier: paged KV cache, admission control, continuous batching.
 
-__all__ = ["KVPagePool", "PageError", "ServeEngine", "Request"]
+``kvcache``    — :class:`KVPagePool`: fixed-size blocks, prefix sharing with
+                 refcounts + copy-on-write, deterministic LRU eviction.
+``scheduler``  — :class:`ServeScheduler`: bounded admission queue with
+                 reject / shed-oldest overload policies, slot+block-aware
+                 admission planning, preemption victims.
+``engine``     — :class:`ServeEngine`: continuously-batched decoding on one
+                 persistent SpTaskGraph; per-request sampling controls.
+``loadgen``    — seeded Poisson load generator + latency metrics for
+                 ``benchmarks/serving_bench.py``.
+"""
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.kvcache import BlockTable, KVBlock, KVPagePool, PageError
+from repro.serving.loadgen import LoadSpec, build_workload, run_load
+from repro.serving.scheduler import Admission, AdmissionError, ServeScheduler
+
+__all__ = [
+    "Admission",
+    "AdmissionError",
+    "BlockTable",
+    "KVBlock",
+    "KVPagePool",
+    "LoadSpec",
+    "PageError",
+    "Request",
+    "ServeEngine",
+    "ServeScheduler",
+    "build_workload",
+    "run_load",
+]

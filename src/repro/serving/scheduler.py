@@ -1,0 +1,192 @@
+"""Admission control and continuous-batch scheduling for the serve engine.
+
+DuctTeip's lesson (PAPERS.md) applies directly here: at serving scale the
+bottleneck is the data/admission plane, not the task graph.  This module is
+that plane:
+
+* :class:`AdmissionQueue` semantics live inside :class:`ServeScheduler` — a
+  **bounded** wait queue with an overload policy: ``"reject"`` raises
+  :class:`AdmissionError` at submit time (backpressure to the caller),
+  ``"shed-oldest"`` drops the longest-waiting request (marked
+  ``req.rejected``) to make room for the newcomer.
+
+* :meth:`ServeScheduler.plan` decides, between engine iterations, which
+  waiting requests join the decode batch.  A request is admitted only when
+  a batch slot is free **and** the paged pool can hold its prompt blocks —
+  a failed block allocation leaves the request queued (backpressure under
+  memory pressure) rather than crashing the serve loop.  For each admission
+  it picks one of three data paths:
+
+  - ``"restore"`` — every needed block is live and payload-backed
+    (prefix-cache hit, or a preempted sequence resuming): the engine
+    scatters saved KV rows back into the slot and skips prefill entirely.
+  - ``"prefill"`` — fresh request: run prefill, sample the first token
+    from its logits.
+  - ``"prefill-resume"`` — a preempted sequence whose blocks were evicted:
+    re-prefill prompt + generated-so-far to rebuild the KV rows (the next
+    token is already known, so prefill logits are discarded).
+
+* Preemption: when a mid-decode block append cannot be satisfied, the
+  engine asks :meth:`preemption_victim` — youngest-admitted-first, the
+  request that has sunk the least work.
+
+The scheduler exposes ``queue_depth`` and per-counter stats so overload is
+observable (``ServeEngine.stats()`` merges them with pool occupancy).
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+import threading
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.serving.kvcache import KVPagePool, PageError
+
+
+class AdmissionError(RuntimeError):
+    """Submit rejected: the bounded admission queue is full."""
+
+
+@dataclass
+class Admission:
+    """One planned admission: the request, its batch slot, and the data path
+    (``"restore"`` / ``"prefill"`` / ``"prefill-resume"``)."""
+
+    req: object
+    slot: int
+    mode: str
+
+
+class ServeScheduler:
+    """Bounded admission queue + slot/block-aware admission planning."""
+
+    def __init__(
+        self,
+        pool: KVPagePool,
+        n_slots: int,
+        *,
+        max_queue: int = 64,
+        overload: str = "reject",
+    ):
+        if overload not in ("reject", "shed-oldest"):
+            raise ValueError(f"unknown overload policy {overload!r}")
+        self.pool = pool
+        self.n_slots = n_slots
+        self.max_queue = max_queue
+        self.overload = overload
+        self._waiting: collections.deque = collections.deque()
+        self._free_slots: list[int] = list(range(n_slots))
+        self._lock = threading.Lock()
+        self._admit_seq = itertools.count()
+        self.rejected = 0
+        self.shed = 0
+        self.admitted = 0
+        self.preemptions = 0
+
+    # ------------------------------------------------------------- queueing
+
+    def submit(self, req) -> None:
+        """Enqueue; on overflow apply the overload policy."""
+        with self._lock:
+            if len(self._waiting) >= self.max_queue:
+                if self.overload == "reject":
+                    self.rejected += 1
+                    raise AdmissionError(
+                        f"admission queue full ({self.max_queue} waiting); "
+                        "request rejected"
+                    )
+                victim = self._waiting.popleft()
+                victim.rejected = True
+                victim.done = True
+                self.shed += 1
+            self._waiting.append(req)
+
+    def requeue(self, req) -> None:
+        """Put a preempted request back at the head of the queue."""
+        with self._lock:
+            self._waiting.appendleft(req)
+        self.preemptions += 1
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._waiting)
+
+    @property
+    def slot_occupancy(self) -> float:
+        with self._lock:
+            return (self.n_slots - len(self._free_slots)) / self.n_slots
+
+    def free_slot(self, slot: int) -> None:
+        with self._lock:
+            self._free_slots.append(slot)
+            self._free_slots.sort()
+
+    # ------------------------------------------------------------- planning
+
+    def plan(self, *, pageable: bool) -> list[Admission]:
+        """Admit waiting requests while slots and blocks allow.  Block
+        allocation happens here (driver thread, graph drained) so the
+        admission either fully reserves its memory or stays queued."""
+        out: list[Admission] = []
+        with self._lock:
+            while self._waiting and self._free_slots:
+                req = self._waiting[0]
+                try:
+                    mode = self._reserve(req, pageable)
+                except PageError:
+                    break  # backpressure: pool full, keep the request queued
+                self._waiting.popleft()
+                slot = self._free_slots.pop(0)
+                req.admit_order = next(self._admit_seq)
+                self.admitted += 1
+                out.append(Admission(req, slot, mode))
+        return out
+
+    def _reserve(self, req, pageable: bool) -> str:
+        """Pin blocks for ``req`` and pick its data path (may raise PageError,
+        leaving the pool unchanged)."""
+        pool = self.pool
+        prompt = [int(t) for t in req.prompt]
+        if req.out_tokens:  # resuming a preempted sequence
+            table = pool.resume(req.req_id)
+            if table is not None:
+                if all(
+                    pool.block(b).payload is not None for b in table.block_ids
+                ):
+                    return "restore"
+                # blocks survived but carry no rows (non-pageable model):
+                # drop the pins and rebuild the KV state through prefill
+                pool.release(req.req_id, keep_resident=False)
+            fed = prompt + [int(t) for t in req.out_tokens[:-1]]
+            pool.allocate(req.req_id, fed)
+            return "prefill-resume"
+        if pageable and len(prompt) > 1 and pool.probe_restore(prompt[:-1]):
+            # prefix-cache hit: KV rows for prompt[:-1] are all saved;
+            # the last prompt token is fed through the normal decode step
+            pool.allocate(req.req_id, prompt[:-1])
+            return "restore"
+        pool.allocate(req.req_id, prompt)
+        return "prefill"
+
+    def preemption_victim(self, running: dict, exclude: int | None = None):
+        """(slot, req) to preempt: youngest admission first; None if only the
+        excluded slot is running."""
+        candidates = [
+            (slot, req) for slot, req in running.items() if slot != exclude
+        ]
+        if not candidates:
+            return None
+        return max(candidates, key=lambda kv: kv[1].admit_order)
+
+    def stats(self) -> dict:
+        return {
+            "queue_depth": self.queue_depth,
+            "max_queue": self.max_queue,
+            "overload": self.overload,
+            "slot_occupancy": self.slot_occupancy,
+            "admitted": self.admitted,
+            "rejected": self.rejected,
+            "shed": self.shed,
+            "preemptions": self.preemptions,
+        }
