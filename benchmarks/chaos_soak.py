@@ -1,0 +1,38 @@
+"""Chaos soak for CI (ISSUE 8): 3 seeds x 20 iterations per scenario,
+run under ``pytest --timeout`` so a wedged run fails instead of hanging
+the job.  Locally the same soak is one command:
+
+    PYTHONPATH=src python -m repro.dist.chaos --seeds 3 --iters 20
+
+Each test is one (scenario, seed) cell so a failure names the exact
+schedule to replay.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.dist.chaos import chaos_collectives, chaos_elastic, chaos_serve
+
+SEEDS = (0, 1, 2)
+ITERS = 20
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_soak_collectives(seed):
+    stats = chaos_collectives(seed=seed, iters=ITERS)
+    assert stats["escalations"] == 0
+    assert sum(stats["faults"].values()) > 0
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_soak_elastic(seed):
+    stats = chaos_elastic(seed=seed, iters=ITERS)
+    assert stats["resume"] is not None
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_soak_serve(seed):
+    stats = chaos_serve(seed=seed, iters=ITERS)
+    assert stats["completed"] > 0
+    assert stats["requests"] == stats["completed"] + stats["deadline_shed"] \
+        + stats["shed"] + stats["cancels"] + stats["cancelled_q"]

@@ -86,7 +86,15 @@ from .comm import (
 )
 from .engine import SpComputeEngine, SpWorker, SpWorkerTeam, SpWorkerTeamBuilder
 from .graph import SpSpeculativeModel, SpTaskGraph
-from .api import SpCodelet, SpRuntime, SpSlot, current_graph, graph_scope, sp_task
+from .api import (
+    ElasticEvent,
+    SpCodelet,
+    SpRuntime,
+    SpSlot,
+    current_graph,
+    graph_scope,
+    sp_task,
+)
 from .scheduler import (
     CriticalPathScheduler,
     FifoScheduler,
@@ -99,7 +107,7 @@ from .scheduler import (
 )
 from .staged import execute_staged, linearize, schedule_summary
 from .trace import trace_metrics
-from .task import Task, TaskState, TaskView
+from .task import SpTaskPolicy, SpTaskTimeoutError, Task, TaskState, TaskView
 
 __all__ = [
     "AccessMode", "SpAccess", "SpArrayAccess", "SpAtomicWrite", "SpAtomicWriteArray",
@@ -118,4 +126,6 @@ __all__ = [
     "PriorityScheduler", "SpAbstractScheduler", "WorkStealingScheduler",
     "compute_upward_ranks", "make_scheduler", "execute_staged", "linearize",
     "schedule_summary", "trace_metrics", "Task", "TaskState", "TaskView",
+    # robustness (ISSUE 8): task policies, watchdog timeout, elastic runtime
+    "ElasticEvent", "SpTaskPolicy", "SpTaskTimeoutError",
 ]

@@ -53,6 +53,7 @@ import contextlib
 import contextvars
 import functools
 import inspect
+import time
 from typing import Any, Callable, Optional, Sequence
 
 from .access import (
@@ -66,7 +67,7 @@ from .access import (
     SpWrite,
 )
 from .graph import SpSpeculativeModel, SpTaskGraph
-from .task import TaskView
+from .task import SpTaskPolicy, TaskView
 
 # ---------------------------------------------------------------------------
 # Current-graph scope.
@@ -236,7 +237,10 @@ class SpCodelet:
     """
 
     #: call-time keywords reserved for the runtime (never static params)
-    RESERVED = ("graph", "name", "priority", "cost")
+    RESERVED = (
+        "graph", "name", "priority", "cost",
+        "retries", "retry_backoff", "timeout", "on_failure",
+    )
 
     def __init__(
         self,
@@ -249,12 +253,14 @@ class SpCodelet:
         cost: float = 1.0,
         priority: int = 0,
         comm: bool = False,
+        policy: SpTaskPolicy | None = None,
     ):
         self.name = name or getattr(fn, "__name__", "codelet")
         self.slots = list(slots)
         self.cost = cost
         self.priority = priority
         self.comm = comm
+        self.policy = policy  # default robustness policy for inserted tasks
         self.__doc__ = getattr(fn, "__doc__", None)
         self._static = set(static)
         self._has_var_kw = has_var_kw
@@ -311,6 +317,25 @@ class SpCodelet:
         name = kwargs.pop("name", None) or self.name
         priority = kwargs.pop("priority", self.priority)
         cost = kwargs.pop("cost", self.cost)
+        # per-call robustness overrides (ISSUE 8); default to the codelet's
+        # declared policy
+        policy = self.policy
+        if any(k in kwargs for k in ("retries", "retry_backoff", "timeout", "on_failure")):
+            base = policy
+            policy = SpTaskPolicy(
+                retries=kwargs.pop(
+                    "retries", base.retries if base is not None else 0
+                ),
+                retry_backoff=kwargs.pop(
+                    "retry_backoff", base.retry_backoff if base is not None else 0.0
+                ),
+                timeout=kwargs.pop(
+                    "timeout", base.timeout if base is not None else None
+                ),
+                on_failure=kwargs.pop(
+                    "on_failure", base.on_failure if base is not None else None
+                ),
+            )
 
         # -- bind slots (positional first, then by name) ---------------------
         if len(args) > len(self.slots):
@@ -393,6 +418,7 @@ class SpCodelet:
         )
         view.task.result_cell = result_cell
         view.task.preferred_kind = preferred
+        view.task.policy = policy
         return view
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
@@ -428,6 +454,10 @@ def sp_task(
     cost: float = 1.0,
     priority: int = 0,
     comm: bool = False,
+    retries: int = 0,
+    retry_backoff: float = 0.0,
+    timeout: float | None = None,
+    on_failure: str | None = None,
 ):
     """Declare a codelet (see module docstring).
 
@@ -436,12 +466,30 @@ def sp_task(
     ``SpRead``/``SpWrite``/... become the slots.  All other parameters are
     static and supplied at call time.  ``comm=True`` marks every inserted
     task as a communication task (scheduling hint, see ``SpTaskGraph.task``).
+
+    Robustness policy (ISSUE 8): ``retries``/``retry_backoff`` re-run a
+    raising body (exponential backoff between attempts), ``timeout`` arms
+    the engine watchdog that fails a hung body with ``SpTaskTimeoutError``,
+    and ``on_failure`` picks what a terminal failure does — ``"raise"``
+    (park the error for ``wait_all_tasks``), ``"retry"`` (the default once
+    ``retries > 0``), or ``"quarantine"`` (keep the graph alive: record the
+    task on ``graph.quarantined``, cancel dependents with
+    ``CancelledError``, let siblings finish).  Every knob can be overridden
+    per call: ``codelet(x, y, retries=3, timeout=0.5)``.
     """
 
     def wrap(f: Callable) -> SpCodelet:
         slots, static, has_var_kw = _build_slots(
             f, read, write, commutative, maybe, atomic
         )
+        policy = None
+        if retries or retry_backoff or timeout is not None or on_failure is not None:
+            policy = SpTaskPolicy(
+                retries=retries,
+                retry_backoff=retry_backoff,
+                timeout=timeout,
+                on_failure=on_failure,
+            )
         return SpCodelet(
             f,
             slots,
@@ -451,6 +499,7 @@ def sp_task(
             cost=cost,
             priority=priority,
             comm=comm,
+            policy=policy,
         )
 
     if fn is not None:  # bare @sp_task — annotation spelling
@@ -461,6 +510,47 @@ def sp_task(
 # ---------------------------------------------------------------------------
 # One runtime over both backends.
 # ---------------------------------------------------------------------------
+
+class ElasticEvent:
+    """What the runtime learned in one recovery, handed to ``on_reshard``.
+
+    ``group`` is the *shrunken* :class:`~repro.core.comm.SpCommGroup` (None
+    for local/simulated elasticity), ``dead`` the agreed dead set,
+    ``payloads`` each survivor's re-roll payload keyed by physical rank,
+    ``resume_step`` the minimum exchanged next step (the hook may return an
+    int to override it), ``detect_at``/``reroll_s`` the detection timestamp
+    and agreement latency."""
+
+    __slots__ = (
+        "epoch", "dead", "payloads", "resume_step", "group",
+        "detect_at", "reroll_s",
+    )
+
+    def __init__(
+        self,
+        epoch: int,
+        dead: frozenset,
+        payloads: dict,
+        resume_step: int,
+        *,
+        group=None,
+        detect_at: float | None = None,
+        reroll_s: float | None = None,
+    ):
+        self.epoch = epoch
+        self.dead = dead
+        self.payloads = payloads
+        self.resume_step = resume_step
+        self.group = group
+        self.detect_at = detect_at
+        self.reroll_s = reroll_s
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (
+            f"ElasticEvent(epoch={self.epoch}, dead={sorted(self.dead)}, "
+            f"resume_step={self.resume_step})"
+        )
+
 
 class SpRuntime:
     """Unified entry point (paper Code 1): one constructor, two backends.
@@ -477,6 +567,17 @@ class SpRuntime:
     Used as a context manager the runtime opens a graph scope: codelet calls
     inside the block target its graph.  ``SpRuntime(4)`` (a bare int) is the
     legacy spelling for an eager runtime with 4 workers.
+
+    Elastic mode (ISSUE 8): ``SpRuntime(elastic=True, group=...)`` pushes
+    rank-death recovery *into* the runtime — :meth:`run_step` /
+    :meth:`elastic_loop` catch ``SpRankDeadError``/``SpCommError`` escaping
+    a step, drive the epoch-tagged :func:`reroll_ranks` agreement, rebind
+    ``self.group`` to the shrunken survivors, invoke the ``on_reshard``
+    hook (live resharding, e.g. ``jax.device_put`` of surviving shards) and
+    transparently re-execute from the agreed resume step.  User code needs
+    zero failure handling.  With ``group=None`` the same loop serves
+    *local* elasticity (simulated chip loss): recovery is whatever
+    ``on_reshard`` does.
     """
 
     def __init__(
@@ -490,14 +591,31 @@ class SpRuntime:
         speculative_model: SpSpeculativeModel = SpSpeculativeModel.SP_NO_SPEC,
         trace: bool = True,
         n_threads: int | None = None,
+        elastic: bool = False,
+        group=None,
+        on_reshard: Callable[["ElasticEvent"], Optional[int]] | None = None,
+        reroll_timeout: float = 30.0,
+        detect_grace: float = 10.0,
     ):
         if isinstance(backend, int):  # legacy SpRuntime(n_threads)
             n_threads = backend
             backend = "eager"
         if backend not in ("eager", "staged"):
             raise ValueError(f"unknown backend {backend!r}; use 'eager' or 'staged'")
+        if elastic and backend != "eager":
+            raise ValueError(
+                "elastic=True needs the eager backend: recovery re-executes "
+                "steps on live worker threads"
+            )
         self.backend = backend
         self.policy = policy
+        self.elastic = bool(elastic)
+        self.group = group
+        self.on_reshard = on_reshard
+        self.reroll_timeout = reroll_timeout
+        self.detect_grace = detect_grace
+        self.epoch = 0
+        self.recoveries: list[dict] = []  # one record per survived failure
         self.graph = SpTaskGraph(speculative_model, trace=trace)
         self.engine = None
         self._own_engine = False
@@ -583,6 +701,200 @@ class SpRuntime:
     def stop(self) -> None:
         if self._own_engine and self.engine is not None:
             self.engine.stop()
+
+    # -------------------------------------------------------------- elasticity
+
+    def _begin_step(self) -> SpTaskGraph:
+        """Open a fresh per-step graph on the shared engine and make it the
+        insertion scope.  A step that fails mid-collective is abandoned
+        wholesale — its lingering receives time out harmlessly on the comm
+        thread while the next step inserts into a clean graph."""
+        self.graph = SpTaskGraph(trace=False).compute_on(self.engine)
+        if self._scope_token is not None:
+            _scope.reset(self._scope_token)
+            self._scope_token = _scope.set(self.graph)
+        return self.graph
+
+    def _await_step(self, tg: SpTaskGraph, timeout: float) -> bool:
+        """Wait for the step graph; ``False`` when a group member died
+        while we waited (the transport's dead set grew), re-raising
+        anything unrelated to rank death."""
+        from .comm import SpCommError
+
+        transport = self.group.hub if self.group is not None else None
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                tg.wait_all_tasks(timeout=0.1)
+                return True
+            except TimeoutError:
+                if transport is not None and (
+                    transport.dead_ranks & set(self.group.members)
+                ):
+                    return False
+                if time.monotonic() > deadline:
+                    raise
+            except SpCommError:
+                return False
+
+    def _recover(self, step: int) -> int:
+        """One recovery: agree on the dead set, shrink the group, call the
+        reshard hook, return the step to resume from."""
+        from .comm import SpCommError
+
+        t_fail = time.monotonic()
+        if self.group is None:
+            # local/simulated elasticity (launch/train.py): nothing to
+            # re-roll — recovery is whatever the reshard hook does
+            self.epoch += 1
+            resume = step
+            event = ElasticEvent(self.epoch, frozenset(), {}, step)
+            if self.on_reshard is not None:
+                override = self.on_reshard(event)
+                if override is not None:
+                    resume = int(override)
+            self.recoveries.append(
+                {
+                    "epoch": self.epoch,
+                    "mode": "local",
+                    "step": step,
+                    "resume": resume,
+                    "seconds": time.monotonic() - t_fail,
+                }
+            )
+            return resume
+
+        from ..launch.rendezvous import reroll_ranks
+
+        transport = self.group.hub
+        members = set(self.group.members)
+        # the task error can beat the router's death broadcast by a tick —
+        # give the failure detector a moment to learn who died
+        learn_by = time.monotonic() + self.detect_grace
+        while not (transport.dead_ranks & members):
+            if time.monotonic() > learn_by:
+                raise SpCommError(
+                    f"rank {self.group.rank}: step {step} failed but no rank "
+                    f"was declared dead within {self.detect_grace}s"
+                )
+            time.sleep(0.005)
+        dead_now = transport.dead_ranks & members
+        detect_at = min(
+            transport.death_detected_at(r) or time.monotonic() for r in dead_now
+        )
+        last_exc: Optional[BaseException] = None
+        for _ in range(5):
+            # a death landing between re-roll rounds diverges the dead set;
+            # the protocol says: re-roll with a fresh epoch
+            self.epoch += 1
+            t0 = time.monotonic()
+            try:
+                group, dead, payloads = reroll_ranks(
+                    self.group,
+                    epoch=self.epoch,
+                    payload={"next_step": step},
+                    timeout=self.reroll_timeout,
+                )
+                break
+            except SpCommError as e:
+                last_exc = e
+                time.sleep(0.01)
+        else:
+            raise last_exc  # type: ignore[misc]
+        reroll_s = time.monotonic() - t0
+        self.group = group
+        resume = min(p["next_step"] for p in payloads.values())
+        event = ElasticEvent(
+            self.epoch,
+            dead,
+            payloads,
+            resume,
+            group=group,
+            detect_at=detect_at,
+            reroll_s=reroll_s,
+        )
+        if self.on_reshard is not None:
+            override = self.on_reshard(event)
+            if override is not None:
+                resume = int(override)
+        self.recoveries.append(
+            {
+                "epoch": self.epoch,
+                "mode": "reroll",
+                "step": step,
+                "resume": resume,
+                "dead": sorted(dead),
+                "members": list(group.members),
+                "detect_at": detect_at,
+                "reroll_s": reroll_s,
+                "seconds": time.monotonic() - t_fail,
+            }
+        )
+        return resume
+
+    def barrier(self, timeout: float = 60.0) -> None:
+        """Wait for the current step graph to drain.  Raises
+        ``SpRankDeadError`` when a group member died while waiting — inside
+        :meth:`run_step` / :meth:`elastic_loop` that triggers transparent
+        recovery, so a step function can synchronize mid-step (e.g. to read
+        a collective's result) without any failure handling of its own."""
+        if not self._await_step(self.graph, timeout):
+            from .comm import SpRankDeadError
+
+            raise SpRankDeadError(
+                f"a member of {sorted(self.group.members)} died during the step"
+            )
+
+    def run_step(self, fn: Callable[[int], Any], *, step: int = 0,
+                 step_timeout: float = 60.0) -> Any:
+        """Execute ``fn(step)`` inside a fresh per-step graph, surviving
+        rank death: on failure the runtime re-rolls the group, reshards and
+        re-executes the *same* step.  ``fn`` must be re-runnable from its
+        inputs (use :meth:`elastic_loop` when survivors may need to rewind
+        to an earlier step)."""
+        if not self.elastic:
+            raise RuntimeError("run_step requires SpRuntime(elastic=True)")
+        from .comm import SpCommError, SpRankDeadError
+
+        while True:
+            tg = self._begin_step()
+            try:
+                out = fn(step)
+                failed = not self._await_step(tg, step_timeout)
+            except (SpRankDeadError, SpCommError):
+                failed = True
+            if not failed:
+                return out
+            self._recover(step)
+
+    def elastic_loop(self, fn: Callable[[int], Any], steps: int, *,
+                     start: int = 0, step_timeout: float = 60.0) -> dict[int, Any]:
+        """Drive ``fn(step)`` for ``step in range(start, steps)`` with
+        in-runtime failure recovery: each step gets a fresh graph; a rank
+        death re-rolls the group, reshards (``on_reshard``) and resumes
+        from the minimum step any survivor still needs — re-executing
+        completed steps when a peer was behind, so ``fn`` must be
+        deterministic given its step index.  Returns ``{step: result}``
+        with the *last* execution of each step."""
+        if not self.elastic:
+            raise RuntimeError("elastic_loop requires SpRuntime(elastic=True)")
+        from .comm import SpCommError, SpRankDeadError
+
+        results: dict[int, Any] = {}
+        step = start
+        while step < steps:
+            tg = self._begin_step()
+            try:
+                out = fn(step)
+                failed = not self._await_step(tg, step_timeout)
+            except (SpRankDeadError, SpCommError):
+                failed = True
+            if failed:
+                step = self._recover(step)
+                continue
+            results[step] = out
+            step += 1
+        return results
 
     # ----------------------------------------------------------------- scope
 

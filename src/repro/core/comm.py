@@ -62,7 +62,25 @@ signals feed the detector on the :class:`SocketTransport` star:
 
 Either way the router broadcasts a ``dead`` control frame to every
 survivor; each transport records the rank in its dead set
-(:meth:`SpTransport.mark_dead`).  From then on, ``post`` to the dead rank
+(:meth:`SpTransport.mark_dead`).
+
+Detection-latency tradeoff (ISSUE 8): the heartbeat knobs are
+configurable — ``SocketTransport(heartbeat=interval,
+staleness_factor=k)`` declares a silent rank dead after ``interval * k``
+seconds (default ``0.5 s × 20 = 10 s``; the ``REPRO_HB_INTERVAL``
+environment variable overrides the interval fleet-wide).  A *smaller*
+interval detects wedged ranks faster and tightens elastic-recovery
+latency, but burns more control-plane frames through the rank-0 router
+(one ``hb`` per rank per interval) and — with a small staleness factor —
+risks false positives on a loaded host where a healthy rank's heartbeat
+thread is descheduled past the staleness window: a rank declared dead is
+*permanently* evicted (its reconnects are refused), so err on the side of
+``interval * k`` being several times the worst GC/GIL pause you expect.
+EOF detection (a SIGKILLed process's kernel-closed socket) is independent
+of these knobs and fires in milliseconds either way; heartbeats only
+bound detection of alive-but-wedged ranks.  Per-request *recv* patience
+is a different axis: pass ``timeout=`` to ``mpi_recv``/``mpi_broadcast``
+or set ``SpCommGroup(default_timeout=...)``.  From then on, ``post`` to the dead rank
 and ``poll`` of an empty mailbox whose source is dead raise
 :class:`SpRankDeadError` — so every *pending* receive fails on its next
 comm-thread tick and every *future* request fails immediately, and
@@ -85,6 +103,7 @@ from __future__ import annotations
 import collections
 import functools
 import importlib
+import os
 import socket
 import struct
 import threading
@@ -777,10 +796,33 @@ class SocketTransport(_LockedMailboxes):
         port: int = 0,
         connect_timeout: float = 10.0,
         max_dial_retries: int = 100,
-        heartbeat_interval: float = 0.5,
-        heartbeat_timeout: float = 10.0,
+        heartbeat: float | None = None,
+        staleness_factor: float | None = None,
+        heartbeat_interval: float | None = None,
+        heartbeat_timeout: float | None = None,
     ):
         super().__init__()
+        # Resolve the heartbeat knobs (ISSUE 8).  ``heartbeat`` is the short
+        # spelling, ``heartbeat_interval`` the original one — passing both is
+        # ambiguous.  Precedence: explicit kwarg > REPRO_HB_INTERVAL env >
+        # 0.5 s default.  The staleness window defaults to 20 heartbeats so
+        # the historical 0.5 s → 10 s pairing is preserved; an explicit
+        # ``heartbeat_timeout`` wins over ``staleness_factor``.
+        if heartbeat is not None and heartbeat_interval is not None:
+            raise ValueError("pass heartbeat= or heartbeat_interval=, not both")
+        if heartbeat_timeout is not None and staleness_factor is not None:
+            raise ValueError("pass heartbeat_timeout= or staleness_factor=, not both")
+        interval = heartbeat if heartbeat is not None else heartbeat_interval
+        if interval is None:
+            env = os.environ.get("REPRO_HB_INTERVAL", "").strip()
+            interval = float(env) if env else 0.5
+        if interval <= 0.0:
+            raise ValueError(f"heartbeat interval must be > 0, got {interval}")
+        if heartbeat_timeout is None:
+            factor = 20.0 if staleness_factor is None else staleness_factor
+            if factor <= 1.0:
+                raise ValueError(f"staleness_factor must be > 1, got {factor}")
+            heartbeat_timeout = interval * factor
         self.rank, self.size, self.host = rank, size, host
         self._received = 0
         self._closed = False
@@ -822,7 +864,7 @@ class SocketTransport(_LockedMailboxes):
             target=self._recv_loop, name=f"sprecv-{rank}", daemon=True
         )
         self._reader.start()
-        self._hb_interval = heartbeat_interval
+        self._hb_interval = interval
         self._hb_stop = threading.Event()
         self._hb = threading.Thread(
             target=self._hb_loop, name=f"sphb-{rank}", daemon=True

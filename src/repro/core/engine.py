@@ -22,10 +22,11 @@ from __future__ import annotations
 import os
 import threading
 import time
+from concurrent.futures import CancelledError
 from typing import Optional
 
 from .scheduler import FifoScheduler, SpAbstractScheduler, WorkStealingScheduler
-from .task import Task, TaskState
+from .task import SpTaskTimeoutError, Task, TaskState
 
 
 class SpWorker(threading.Thread):
@@ -96,6 +97,56 @@ class SpWorkerTeamBuilder:
     TeamOfCpuCudaWorkers = team_of_cpu_cuda_workers
 
 
+class _Watchdog(threading.Thread):
+    """Hung-task monitor (ISSUE 8).  Workers arm a deadline per attempt of a
+    policy-timed task; on expiry the engine fails the task with
+    :class:`SpTaskTimeoutError` and completes it *externally* — the worker
+    thread stuck in the body becomes a discarded zombie and
+    ``wait_all_tasks`` never wedges on it.  Lazily started on the first
+    timed task, so untimed workloads pay nothing."""
+
+    _ids = iter(range(1 << 20))
+
+    def __init__(self, engine: "SpComputeEngine"):
+        super().__init__(name=f"spwatchdog-{next(_Watchdog._ids)}", daemon=True)
+        self.engine = engine
+        self._lock = threading.Lock()
+        self._armed: dict[Task, float] = {}
+        self._kick = threading.Event()
+        self._running = True
+
+    def arm(self, task: Task, deadline: float) -> None:
+        with self._lock:
+            self._armed[task] = deadline
+        self._kick.set()  # re-evaluate the sleep against the new deadline
+
+    def disarm(self, task: Task) -> None:
+        with self._lock:
+            self._armed.pop(task, None)
+
+    def stop(self) -> None:
+        self._running = False
+        self._kick.set()
+
+    def run(self) -> None:
+        while self._running:
+            now = time.monotonic()
+            expired: list[Task] = []
+            nxt: Optional[float] = None
+            with self._lock:
+                for t, d in list(self._armed.items()):
+                    if d <= now:
+                        expired.append(t)
+                        del self._armed[t]
+                    elif nxt is None or d < nxt:
+                        nxt = d
+            for t in expired:
+                self.engine._fail_hung_task(t)
+            self._kick.clear()
+            wait = 0.05 if nxt is None else min(0.05, max(0.0005, nxt - time.monotonic()))
+            self._kick.wait(wait)
+
+
 class SpComputeEngine:
     def __init__(
         self,
@@ -120,6 +171,7 @@ class SpComputeEngine:
         self._workers: list[SpWorker] = []
         self._graphs: list = []
         self._comm = None  # lazily created CommThread (comm.py)
+        self._wd: Optional[_Watchdog] = None  # lazily created hung-task monitor
         self._stop_report: list[str] | None = None  # set by the first stop()
         if team is None:  # (SpWorkerTeam also defines __len__ — same trap)
             team = SpWorkerTeamBuilder.team_of_cpu_workers()
@@ -239,6 +291,14 @@ class SpComputeEngine:
 
     def _execute(self, task: Task, worker: SpWorker) -> None:
         graph = getattr(task, "graph", None)
+        if task.poisoned:
+            # a quarantined/timed-out predecessor: its output never
+            # materialized, so running this task would propagate garbage —
+            # cancel instead (waiters see CancelledError)
+            task.mark_cancelled()
+            if graph is not None:
+                self.push_many(graph.on_task_finished(task))
+            return
         token = getattr(task, "cancel_token", None)
         if token is not None and token.is_set():
             on_cancel = getattr(task, "on_cancel", None)
@@ -258,17 +318,47 @@ class SpComputeEngine:
         locks = [h.commutative_lock for h in task.commutative_handles]
         for lk in locks:
             lk.acquire()
+        policy = task.policy
+        watched = policy is not None and policy.timeout is not None
         task.state = TaskState.RUNNING
         task.worker_name = worker.name
         task.t_start = time.perf_counter()
         try:
-            task.run(preferred_impl=worker.kind)
-        except BaseException as e:
-            task.exception = e
+            attempt = 0
+            while True:
+                if watched:
+                    self._watchdog().arm(task, time.monotonic() + policy.timeout)
+                try:
+                    task.run(preferred_impl=worker.kind)
+                    task.exception = None
+                    break
+                except BaseException as e:
+                    task.exception = e
+                finally:
+                    if watched:
+                        self._watchdog().disarm(task)
+                if task.timed_out:
+                    break  # the watchdog already failed + completed the task
+                attempt += 1
+                if (
+                    policy is None
+                    or attempt > policy.retries
+                    or isinstance(task.exception, CancelledError)
+                    or not self._running
+                ):
+                    break
+                # retry: fresh write-refs are rebuilt by run(); a raising
+                # body never reached its writebacks, so inputs are intact
+                task.retries_used = attempt
+                task.exception = None
+                if policy.retry_backoff > 0.0:
+                    time.sleep(policy.retry_backoff * (2 ** (attempt - 1)))
         finally:
             task.t_end = time.perf_counter()
             for lk in reversed(locks):
                 lk.release()
+        if watched and not task.claim_completion():
+            return  # zombie return: the watchdog completed this task
         if token is not None:
             if task.exception is None:
                 token.set(task)
@@ -294,11 +384,57 @@ class SpComputeEngine:
                         "spec": task.speculative,
                     }
                 )
+            if (
+                task.exception is not None
+                and policy is not None
+                and policy.on_failure == "quarantine"
+            ):
+                # poison-task containment: park the error off the graph's
+                # error list and cancel dependents (before their release)
+                graph.quarantine(task)
             newly = graph.on_task_finished(task)
             task.mark_finished()
             self.push_many(newly)
         else:  # pragma: no cover - tasks always carry a graph backref
             task.mark_finished()
+
+    # --------------------------------------------------------------- watchdog
+
+    def _watchdog(self) -> _Watchdog:
+        if self._wd is None:
+            with self._lock:
+                if self._wd is None:
+                    wd = _Watchdog(self)
+                    wd.start()
+                    self._wd = wd
+        return self._wd
+
+    def _fail_hung_task(self, task: Task) -> None:
+        """Watchdog expiry: fail ``task`` with :class:`SpTaskTimeoutError`
+        and complete it while the worker is still stuck inside the body.
+        The zombie's eventual return is discarded (completion claim +
+        writeback guard in ``Task.run``).  Timeouts are terminal — no retry:
+        the zombie may still be mutating whatever wedged it."""
+        task.timed_out = True
+        if not task.claim_completion():
+            return  # the worker finished inside the race window
+        policy = task.policy
+        task.exception = SpTaskTimeoutError(
+            f"task {task.name!r} exceeded its {policy.timeout}s timeout "
+            f"(watchdog); the hung body is abandoned as a zombie"
+        )
+        graph = getattr(task, "graph", None)
+        if graph is None:  # pragma: no cover - tasks always carry a graph
+            task.mark_finished()
+            return
+        if policy.on_failure == "quarantine":
+            graph.quarantine(task)
+        else:
+            # even on "raise", dependents must not run on garbage inputs
+            graph.poison_dependents(task)
+        newly = graph.on_task_finished(task)
+        task.mark_finished()
+        self.push_many(newly)
 
     # ------------------------------------------------------------- team mgmt
 
@@ -385,7 +521,8 @@ class SpComputeEngine:
     def stop(self) -> list[str]:
         """Stop workers, then the comm thread, then cancel any stranded
         queued tasks.  Returns the names of comm tasks whose requests had
-        to be aborted (empty in a clean shutdown); those tasks carry an
+        to be aborted (empty in a clean shutdown) plus the names of tasks
+        quarantined by their failure policy; aborted tasks carry an
         ``SpCommAbortedError`` so their waiters see a real error instead of
         hanging on a leaked daemon thread.
 
@@ -408,10 +545,15 @@ class SpComputeEngine:
         aborted: list[str] = []
         if self._comm is not None:
             aborted = self._comm.stop()
+        if self._wd is not None:
+            self._wd.stop()
         self._drain_cancel_leftovers()
+        report = aborted + [
+            t.name for g in self._graphs for t in getattr(g, "quarantined", ())
+        ]
         with self._lock:
-            self._stop_report = list(aborted)
-        return aborted
+            self._stop_report = list(report)
+        return report
 
     stopIfNotAlreadyStopped = stop
 

@@ -63,6 +63,10 @@ class SpTaskGraph:
         self._cv = threading.Condition(self._lock)
         self._unfinished = 0
         self.errors: list[BaseException] = []
+        # poison tasks parked by the failure policy (ISSUE 8): their errors
+        # do NOT surface through wait_all_tasks — the graph stays alive,
+        # dependents are cancelled, and engine.stop() reports them by name
+        self.quarantined: list[Task] = []
         # trace events appended by the engine: dicts with task/worker/t0/t1.
         # ``trace=False`` turns recording off so the production hot path
         # allocates nothing per task; exports then see an empty trace.
@@ -219,10 +223,41 @@ class SpTaskGraph:
                 newly.extend(h.complete(task))
         with self._cv:
             self._unfinished -= 1
-            if task.exception is not None:
+            if task.exception is not None and not task.quarantined:
                 self.errors.append(task.exception)
             self._cv.notify_all()
         return newly
+
+    # ----------------------------------------------------- failure policies
+
+    def quarantine(self, task: Task) -> None:
+        """Park ``task`` as poison (ISSUE 8 ``on_failure="quarantine"``):
+        its exception stays off the error list (``wait_all_tasks`` keeps
+        working), its transitive dependents are poisoned so the engine
+        cancels them with ``CancelledError`` instead of running them on
+        garbage inputs, and sibling branches proceed untouched.  Call
+        *before* :meth:`on_task_finished` releases the dependents."""
+        task.quarantined = True
+        with self._cv:
+            if task not in self.quarantined:
+                self.quarantined.append(task)
+        self.poison_dependents(task)
+
+    def poison_dependents(self, task: Task) -> None:
+        """Mark every transitive dependent inserted so far as poisoned.
+        Poisoned tasks are cancelled by the engine when they become ready —
+        the marking must happen before the failed task's dependencies are
+        released, so no dependent can slip through the race window."""
+        succ = self.successor_map()
+        stack = list(succ.get(task.uid, []))
+        seen: set[int] = set()
+        while stack:
+            t = stack.pop()
+            if t.uid in seen or t.is_done:
+                continue
+            seen.add(t.uid)
+            t.poisoned = True
+            stack.extend(succ.get(t.uid, []))
 
     def wait_all_tasks(self, timeout: float | None = None, raise_errors: bool = True) -> None:
         with self._cv:

@@ -23,6 +23,67 @@ from .access import AccessMode, SpAccess, SpImpl, SpWriteRef
 _task_ids = itertools.count()
 
 
+class SpTaskTimeoutError(TimeoutError):
+    """A task exceeded its policy ``timeout`` and was failed by the engine's
+    watchdog.  The worker thread that ran it may still be stuck inside the
+    body (a *zombie*): its eventual return is discarded — no result, no
+    writebacks — so the graph's view of the data stays consistent."""
+
+
+class SpTaskPolicy:
+    """Per-task robustness policy (ISSUE 8): stamped on a :class:`Task` by
+    the codelet frontend (``@sp_task(retries=..., timeout=...)``) and
+    enforced by the eager engine.
+
+    * ``retries`` — re-run the body up to this many extra times when it
+      raises (``CancelledError`` and watchdog timeouts are terminal).
+    * ``retry_backoff`` — sleep ``retry_backoff * 2**(attempt-1)`` seconds
+      between attempts.
+    * ``timeout`` — wall-clock budget per attempt; on expiry the watchdog
+      fails the task with :class:`SpTaskTimeoutError` while the hung body
+      keeps running as a discarded zombie.
+    * ``on_failure`` — what a *terminal* failure does to the graph:
+      ``"raise"`` parks the error for ``wait_all_tasks`` (the default);
+      ``"retry"`` is the same after the retry budget is spent (the spelling
+      implied by ``retries>0``); ``"quarantine"`` records the task on
+      ``graph.quarantined``, cancels its dependents with ``CancelledError``
+      and keeps the graph alive — poison tasks no longer wedge the run.
+    """
+
+    __slots__ = ("retries", "retry_backoff", "timeout", "on_failure")
+
+    MODES = ("raise", "retry", "quarantine")
+
+    def __init__(
+        self,
+        retries: int = 0,
+        retry_backoff: float = 0.0,
+        timeout: float | None = None,
+        on_failure: str | None = None,
+    ):
+        if on_failure is None:
+            on_failure = "retry" if retries else "raise"
+        if on_failure not in self.MODES:
+            raise ValueError(
+                f"on_failure must be one of {self.MODES}, got {on_failure!r}"
+            )
+        if retries < 0:
+            raise ValueError(f"retries must be >= 0, got {retries}")
+        if timeout is not None and timeout <= 0:
+            raise ValueError(f"timeout must be positive, got {timeout}")
+        self.retries = int(retries)
+        self.retry_backoff = float(retry_backoff)
+        self.timeout = timeout
+        self.on_failure = on_failure
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (
+            f"SpTaskPolicy(retries={self.retries}, "
+            f"retry_backoff={self.retry_backoff}, timeout={self.timeout}, "
+            f"on_failure={self.on_failure!r})"
+        )
+
+
 class TaskState:
     NOT_READY = "not-ready"
     READY = "ready"
@@ -81,6 +142,13 @@ class Task:
         # platform-preferred impl kind resolved at bind time
         self.result_cell = None
         self.preferred_kind: str | None = None
+        # robustness policy (ISSUE 8): enforced by the eager engine
+        self.policy: SpTaskPolicy | None = None
+        self.retries_used = 0
+        self.timed_out = False  # set by the watchdog; the body is a zombie
+        self.quarantined = False
+        self.poisoned = False  # a quarantined/timed-out predecessor: cancel
+        self._completion_claimed = False
 
     # -- readiness bookkeeping --------------------------------------------------
 
@@ -134,12 +202,29 @@ class Task:
                 args.append(sub_args)
         return args, writebacks
 
+    def claim_completion(self) -> bool:
+        """First caller wins the right to complete this task.  Arbitrates
+        the race between the executing worker and the engine watchdog: a
+        timed-out task is completed by the watchdog, and the zombie worker's
+        eventual return must not complete it a second time."""
+        with self._pending_lock:
+            if self._completion_claimed:
+                return False
+            self._completion_claimed = True
+            return True
+
     def run(self, preferred_impl: str = "ref") -> None:
         """Execute the task body and write back results.  No dependency
         release here — the engine/graph drives that."""
         fn = self.pick_impl(preferred_impl)
         args, writebacks = self.build_args()
-        self.result = fn(*args)
+        out = fn(*args)
+        if self.timed_out:
+            # the watchdog already failed this task and released its
+            # dependents; a zombie's late result/writebacks would clobber
+            # data that successors (or a re-submitted step) now own
+            return
+        self.result = out
         for acc, ref in writebacks:
             if acc.mode is AccessMode.MAYBE_WRITE:
                 self.maybe_written[acc.data.uid] = ref.written

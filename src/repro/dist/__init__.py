@@ -66,6 +66,7 @@ from .collectives import (
     ring_all_gather,
     ring_all_reduce,
 )
+from .chaos import chaos_collectives, chaos_elastic, chaos_serve
 from .fault import (
     CancelToken,
     FailureSimulator,
@@ -83,4 +84,6 @@ __all__ = [
     "ring_all_gather", "ring_all_reduce", "CancelToken", "FailureSimulator",
     "FaultyTransport", "RetryingTransport",
     "RemeshPlan", "remesh_plan", "run_duplicated",
+    # chaos soak harness (ISSUE 8)
+    "chaos_collectives", "chaos_elastic", "chaos_serve",
 ]

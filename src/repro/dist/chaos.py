@@ -1,0 +1,283 @@
+"""Chaos soak harness (ISSUE 8): seeded fault schedules over the three
+recovery surfaces, with exact (or explicitly bounded) correctness checks.
+
+Each scenario builds its whole world from one integer ``seed`` — the
+fault schedule (drop/duplicate/delay/truncate draws, flaky bursts, the
+kill step and victim), the workload, and the oracle — so a failing soak
+is replayed bit-for-bit by rerunning the same seed:
+
+* :func:`chaos_collectives` — ring all-reduce over a :class:`ChannelHub`
+  wrapped in :class:`~repro.dist.fault.FaultyTransport` (drops, dupes,
+  delays, truncations) under a :class:`~repro.dist.fault.RetryingTransport`
+  budget.  Inputs are integer-valued float32 (< 2**24), so float addition
+  is exact and the reduction is order-independent: every iteration must
+  be **bit-exact** against the NumPy sum, faults or not.
+
+* :func:`chaos_elastic` — the in-process elastic-training story: thread
+  ranks drive ``SpRuntime(elastic=True).elastic_loop``; at a seeded step
+  a seeded victim rank dies mid-collective (its death is published via
+  ``mark_dead``, standing in for the router's detector).  Survivors must
+  recover *in-runtime* — no failure handling in the step function — and
+  every step's result must be bit-exact against the full-mesh oracle
+  before the resume step and the survivors-only oracle from it on.
+
+* :func:`chaos_serve` — the serve engine under admission chaos: seeded
+  bursts of requests with mixed deadlines (some already expired), seeded
+  mid-decode ``cancel()`` calls, and a pool sized to force preemptions.
+  The checks are invariants rather than bit-exactness (cancellation is a
+  scheduling race by design): every request terminates, every rejection
+  carries a valid ``reject_reason``, completed requests have exactly the
+  tokens they asked for, and the drained engine holds no slots, queue
+  entries, or pinned block tables.
+
+``python -m repro.dist.chaos --seeds 3 --iters 20`` runs all scenarios
+for seeds ``0..2`` — the CI ``chaos-smoke`` job's entry point.
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import numpy as np
+
+from repro.core import ChannelHub, SpCommGroup, SpData, SpRuntime
+from repro.dist.collectives import ring_all_reduce
+from repro.dist.fault import FaultyTransport, RetryingTransport
+
+
+def _int_grad(rank: int, step: int, n: int) -> np.ndarray:
+    """Integer-valued float32 input: sums stay < 2**24, so float32 addition
+    is exact and associative — the oracle is bit-exact regardless of ring
+    order, retries, or recovery replays."""
+    return ((np.arange(n, dtype=np.float32) % 17.0)
+            + np.float32((rank + 1) * (step + 2)))
+
+
+# ---------------------------------------------------------------------------
+# Scenario 1: collectives under link faults (no deaths — absorption).
+# ---------------------------------------------------------------------------
+
+def chaos_collectives(
+    seed: int,
+    iters: int = 20,
+    *,
+    size: int = 3,
+    n: int = 96,
+    timeout: float = 60.0,
+) -> dict:
+    """Soak ring all-reduce over a lossy, delaying, duplicating link layer;
+    every iteration must reduce bit-exactly."""
+    hub = ChannelHub()
+    faulty = FaultyTransport(
+        hub, seed=seed, drop=0.04, duplicate=0.04, delay=0.04,
+        delay_s=0.002, truncate=0.03,
+    )
+    transport = RetryingTransport(faulty, max_retries=6, backoff=0.001)
+    results: dict[tuple[int, int], np.ndarray] = {}
+    errors: list[BaseException] = []
+
+    def worker(rank: int) -> None:
+        group = SpCommGroup(rank, size, transport, default_timeout=timeout)
+        try:
+            with SpRuntime(workers=2) as rt:
+                for it in range(iters):
+                    x = SpData(_int_grad(rank, it, n), f"cc{rank}.{it}")
+                    ring_all_reduce(rt.graph, group, x, op="sum", tag=it)
+                    rt.wait_all_tasks(timeout=timeout)
+                    results[(rank, it)] = np.asarray(x.value)
+        except BaseException as e:  # surfaced to the driver, not swallowed
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(r,)) for r in range(size)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=iters * timeout)
+    if errors:
+        raise errors[0]
+    for it in range(iters):
+        ref = np.sum([_int_grad(r, it, n) for r in range(size)], axis=0)
+        for rank in range(size):
+            got = results.get((rank, it))
+            assert got is not None, f"rank {rank} lost iteration {it}"
+            np.testing.assert_array_equal(got, ref.astype(np.float32))
+    transport.close()
+    stats = {"iters": iters, "size": size, "faults": dict(faulty.injected),
+             "retries": transport.retries, "escalations": transport.escalations}
+    assert stats["escalations"] == 0, stats  # absorbed, never escalated
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Scenario 2: elastic training surviving a seeded mid-collective death.
+# ---------------------------------------------------------------------------
+
+def chaos_elastic(
+    seed: int,
+    iters: int = 20,
+    *,
+    size: int = 3,
+    n: int = 64,
+    timeout: float = 30.0,
+) -> dict:
+    """Thread ranks all-reduce for ``iters`` steps; a seeded victim dies at
+    a seeded step.  Survivors' per-step results must match the full-mesh
+    oracle before the resume step and the survivors-only oracle after."""
+    rng = np.random.default_rng(seed)
+    kill_at = int(rng.integers(1, max(2, iters - 1)))
+    victim = int(rng.integers(1, size))
+    hub = ChannelHub()
+    faulty = FaultyTransport(
+        hub, seed=seed, drop=0.02, duplicate=0.02,
+        flaky={(victim + 1) % size: 2},
+    )
+    transport = RetryingTransport(faulty, max_retries=6, backoff=0.001)
+    out: dict[int, tuple[dict, list]] = {}
+    errors: list[BaseException] = []
+
+    def worker(rank: int) -> None:
+        group = SpCommGroup(rank, size, transport, default_timeout=timeout)
+        try:
+            with SpRuntime(workers=2, elastic=True, group=group,
+                           detect_grace=timeout) as rt:
+                def step_fn(step):
+                    if rank == victim and step == kill_at:
+                        # die mid-collective; mark_dead stands in for the
+                        # socket router's failure detector (in-process hubs
+                        # have no kernel to close a dead peer's socket)
+                        hub.mark_dead(rank)
+                        raise SystemExit
+                    x = SpData(_int_grad(rank, step, n),
+                               f"ce{rank}.e{rt.epoch}.s{step}")
+                    ring_all_reduce(rt.graph, rt.group, x, op="sum",
+                                    tag=(rt.epoch, step))
+                    rt.barrier(timeout=timeout)
+                    return np.asarray(x.value)
+
+                res = rt.elastic_loop(step_fn, iters, step_timeout=timeout)
+                out[rank] = (res, rt.recoveries)
+        except SystemExit:
+            pass
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(r,)) for r in range(size)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=iters * timeout)
+    if errors:
+        raise errors[0]
+    survivors = [r for r in range(size) if r != victim]
+    assert set(out) == set(survivors), (sorted(out), survivors)
+    for rank in survivors:
+        res, recs = out[rank]
+        assert sorted(res) == list(range(iters)), sorted(res)
+        assert len(recs) == 1 and recs[0]["dead"] == [victim], recs
+        resume = recs[0]["resume"]
+        for step, got in res.items():
+            ranks = range(size) if step < resume else survivors
+            ref = np.sum([_int_grad(r, step, n) for r in ranks], axis=0)
+            np.testing.assert_array_equal(got, ref.astype(np.float32))
+    transport.close()
+    rec = out[survivors[0]][1][0]
+    return {"iters": iters, "kill_at": kill_at, "victim": victim,
+            "resume": rec["resume"], "recovery_s": rec["seconds"],
+            "faults": dict(faulty.injected)}
+
+
+# ---------------------------------------------------------------------------
+# Scenario 3: serve engine under admission chaos.
+# ---------------------------------------------------------------------------
+
+def chaos_serve(seed: int, iters: int = 20, *, max_steps: int = 4000) -> dict:
+    """Seeded request bursts with expired deadlines, mid-decode cancels and
+    a preemption-prone pool; asserts termination + accounting invariants."""
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.models import init_params
+    from repro.serving import ServeEngine
+
+    cfg = reduced_config("deepseek-7b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    all_reqs: list = []
+    cancelled: list = []
+    with ServeEngine(cfg, params, n_slots=2, max_seq=48, block_size=4,
+                     n_blocks=20, max_queue=8, overload="shed-oldest") as eng:
+        total_steps = 0
+        for it in range(iters):
+            burst = []
+            for _ in range(int(rng.integers(2, 5))):
+                prompt = rng.integers(0, cfg.vocab,
+                                      int(rng.integers(4, 10))).astype(np.int32)
+                gen = int(rng.integers(3, 9))
+                # ~1/4 of requests arrive already past their deadline
+                deadline = 0.0 if rng.random() < 0.25 else None
+                burst.append(eng.submit(prompt, gen, deadline=deadline))
+            all_reqs.extend(burst)
+            # seeded mid-flight cancel of one live request in ~1/3 of bursts
+            if rng.random() < 0.33:
+                live = [r for r in burst if r.deadline is None]
+                if live:
+                    vic = live[int(rng.integers(len(live)))]
+                    eng.step()
+                    vic.cancel()
+                    cancelled.append(vic)
+            while eng.scheduler.queue_depth or eng.n_running:
+                eng.step()
+                total_steps += 1
+                assert total_steps < max_steps, "serve soak failed to drain"
+        stats = eng.stats()
+        # invariants: everything terminated, rejections are typed, nothing
+        # leaked — a violated one means a request or its KV blocks wedged
+        assert all(r.done for r in all_reqs)
+        for r in all_reqs:
+            if r.rejected:
+                assert r.reject_reason in ("queue_full", "shed", "deadline"), r
+            elif not r.cancelled:
+                assert len(r.out_tokens) == r.max_new_tokens, r
+        assert eng.n_running == 0 and eng.scheduler.queue_depth == 0
+        assert not eng.pool._tables, "leaked pinned block tables"
+    return {"iters": iters, "requests": len(all_reqs),
+            "completed": sum(1 for r in all_reqs
+                             if r.done and not r.rejected and not r.cancelled),
+            "deadline_shed": stats["deadline_shed"], "shed": stats["shed"],
+            "cancels": stats["cancels"], "cancelled_q": stats["cancelled"],
+            "preemptions": stats["preemptions"], "steps": stats["steps"]}
+
+
+SCENARIOS = {
+    "collectives": chaos_collectives,
+    "elastic": chaos_elastic,
+    "serve": chaos_serve,
+}
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seeds", type=int, default=3,
+                    help="run seeds 0..N-1 through every scenario")
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--scenario", choices=(*SCENARIOS, "all"), default="all")
+    args = ap.parse_args(argv)
+
+    names = list(SCENARIOS) if args.scenario == "all" else [args.scenario]
+    report: dict = {}
+    for name in names:
+        for seed in range(args.seeds):
+            t0 = time.perf_counter()
+            stats = SCENARIOS[name](seed, args.iters)
+            dt = time.perf_counter() - t0
+            report[f"{name}/seed{seed}"] = stats
+            print(f"[chaos] {name} seed={seed} iters={args.iters} "
+                  f"ok in {dt:.1f}s: {stats}")
+    print(f"[chaos] {len(report)} soak runs passed "
+          f"({args.seeds} seeds x {args.iters} iterations each)")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -59,6 +59,41 @@ data-plane story, verified end to end against killed OS processes:
   drives this; ``benchmarks/recovery_bench.py`` measures detection
   latency and live-reshard vs full-restore recovery time into
   ``BENCH_recovery.json``.
+
+In-runtime recovery contract (ISSUE 8)
+--------------------------------------
+
+As of ISSUE 8 the recovery choreography above no longer lives in user
+code: ``SpRuntime(elastic=True)`` owns it.  The contract, verified by
+``tests/test_robustness.py`` against a SIGKILLed OS rank:
+
+* **What the runtime promises.**  Inside
+  :meth:`~repro.core.SpRuntime.run_step` / ``elastic_loop`` every step
+  runs in a fresh graph; when a group member dies — surfaced as
+  ``SpRankDeadError`` from a collective, a :meth:`barrier` call, or the
+  step wait — the runtime re-rolls the group with a fresh epoch, rebinds
+  ``rt.group``, invokes the ``on_reshard`` hook (domain work only:
+  re-mesh, reshard/restore state), and re-executes from the **minimum**
+  step any survivor still needs.  Each recovery is recorded in
+  ``rt.recoveries`` (dead set, detection stamp, re-roll wall time).
+
+* **What the step function promises.**  It must be *deterministic and
+  re-runnable given its step index* — reads its inputs from step-indexed
+  state, tags collectives with ``(rt.epoch, step)``, and contains **no
+  failure handling**.  A step that completed on one rank may re-execute
+  after a peer rewinds; idempotence comes from determinism, not from
+  fencing.
+
+* **Task-level policies** complete the story below rank death: an
+  ``@sp_task(retries=, timeout=, on_failure=)`` policy retries transient
+  task failures in place, the engine watchdog fails *hung* bodies with
+  ``SpTaskTimeoutError`` (the body is abandoned as a zombie whose late
+  writes are discarded), and ``on_failure="quarantine"`` isolates a
+  poison task — dependents cancel, siblings and the graph live on, and
+  ``engine.stop()`` reports the quarantined names.
+
+* ``dist/chaos.py`` soaks all of it under seeded fault schedules
+  (CI's ``chaos-smoke`` job: 3 seeds x 20 iterations).
 """
 from __future__ import annotations
 

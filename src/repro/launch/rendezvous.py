@@ -41,8 +41,10 @@ from typing import Any, Optional
 
 __all__ = [
     "bootstrap_transport",
+    "elastic_train_oracle",
     "reroll_ranks",
     "run_elastic_ring",
+    "run_elastic_train",
     "run_ring_reduce",
 ]
 
@@ -55,8 +57,8 @@ def bootstrap_transport(
     host: str = "127.0.0.1",
     timeout: float = 30.0,
     max_dial_retries: int = 100,
-    heartbeat_interval: float = 0.5,
-    heartbeat_timeout: float = 10.0,
+    heartbeat_interval: float | None = None,
+    heartbeat_timeout: float | None = None,
 ):
     """Create this rank's :class:`SocketTransport`: rank 0 binds ``port``
     and routes, everyone dials.  The dial loop is bounded: at most
@@ -286,22 +288,16 @@ def _elastic_worker(
 ) -> None:
     """One elastic rank: all-reduce ``steps`` times, surviving rank death.
 
-    Every step gets a *fresh* task graph, so a step that fails mid-collective
-    can be abandoned wholesale (its lingering receives time out harmlessly on
-    the comm thread).  On detecting a death — its own failed task *or* the
-    transport's dead set growing while it waits — the rank abandons the
-    step, re-rolls the group with :func:`reroll_ranks` exchanging its next
-    step, and resumes from the minimum exchanged step on the shrunken ring."""
+    Recovery lives in the *runtime* (ISSUE 8): ``SpRuntime(elastic=True)``
+    gives every step a fresh task graph, catches the rank death escaping
+    the step (the failed graph's lingering receives time out harmlessly on
+    the comm thread), drives :func:`reroll_ranks` internally and resumes
+    from the minimum exchanged step on the shrunken ring.  This worker has
+    no failure handling of its own — the hand-rolled catch/re-roll/redo
+    loop this function used to carry is now ``rt.elastic_loop``."""
     import numpy as np
 
-    from repro.core import (
-        SpCommError,
-        SpCommGroup,
-        SpComputeEngine,
-        SpData,
-        SpTaskGraph,
-        SpWorkerTeamBuilder,
-    )
+    from repro.core import SpCommGroup, SpData, SpRuntime
     from repro.dist.collectives import ring_all_reduce
 
     transport = bootstrap_transport(
@@ -309,89 +305,45 @@ def _elastic_worker(
     )
     if rank == 0 and port_q is not None:
         port_q.put(transport.port)
-    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(2))
     try:
         group = SpCommGroup(rank, size, transport, default_timeout=30.0)
         rng = np.random.default_rng(rank)
         base = rng.standard_normal(n).astype(np.float32)
 
-        results: dict[int, Any] = {}
-        epoch = 0
-        resume_step: Optional[int] = None
-        detect_at: Optional[float] = None
-        reroll_s: Optional[float] = None
-        step = 0
-        while step < steps:
-            tg = SpTaskGraph(trace=False).compute_on(eng)
-            x = SpData(base.copy(), f"e{epoch}s{step}")
-            ring_all_reduce(tg, group, x, op="sum", tag=(epoch, step))
-            # progress is reported *after* the collective is inserted — its
-            # comm tasks are already in flight on the engine's background
-            # threads, so a parent killing on this report kills mid-collective
-            progress_q.put(("step", rank, step))
-            if victim_hold is not None and step == victim_hold[0]:
-                # the designated victim lingers inside the collective so the
-                # parent's SIGKILL reliably lands mid-flight
-                time.sleep(victim_hold[1])
-            failed = False
-            deadline = time.monotonic() + 60.0
-            while True:
-                try:
-                    tg.wait_all_tasks(timeout=0.1)
-                    break
-                except TimeoutError:
-                    if transport.dead_ranks & set(group.members):
-                        failed = True  # a member died while we waited
-                        break
-                    if time.monotonic() > deadline:
-                        raise
-                except SpCommError:
-                    failed = True
-                    break
-            if failed:
-                # the task error can beat the router's death broadcast by a
-                # tick — give the transport a moment to learn who died
-                learn_by = time.monotonic() + 10.0
-                while not (transport.dead_ranks & set(group.members)):
-                    if time.monotonic() > learn_by:
-                        raise SpCommError(
-                            f"rank {rank}: step {step} failed but no rank "
-                            f"was declared dead within 10s"
-                        )
-                    time.sleep(0.005)
-                dead_now = transport.dead_ranks & set(group.members)
-                detect_at = min(
-                    (transport.death_detected_at(r) or time.monotonic())
-                    for r in dead_now
-                ) if dead_now else time.monotonic()
-                epoch += 1
-                t0 = time.monotonic()
-                group, dead, payloads = reroll_ranks(
-                    group, epoch=epoch, payload={"next_step": step}
-                )
-                reroll_s = time.monotonic() - t0
-                resume_step = min(p["next_step"] for p in payloads.values())
-                step = resume_step
-                continue
-            results[step] = x.value
-            step += 1
+        with SpRuntime(workers=2, elastic=True, group=group) as rt:
 
-        q.put(
-            (
-                rank,
-                {
-                    "steps": results,
-                    "resume_step": resume_step,
-                    "detect_at": detect_at,
-                    "reroll_s": reroll_s,
-                    "members": list(group.members),
-                    "dead": sorted(transport.dead_ranks),
-                    "stats": transport.stats(),
-                },
+            def step_fn(step: int):
+                x = SpData(base.copy(), f"e{rt.epoch}s{step}")
+                ring_all_reduce(rt.graph, rt.group, x, op="sum", tag=(rt.epoch, step))
+                # progress is reported *after* the collective is inserted —
+                # its comm tasks are already in flight on the engine's
+                # background threads, so a parent killing on this report
+                # kills mid-collective
+                progress_q.put(("step", rank, step))
+                if victim_hold is not None and step == victim_hold[0]:
+                    # the designated victim lingers inside the collective so
+                    # the parent's SIGKILL reliably lands mid-flight
+                    time.sleep(victim_hold[1])
+                rt.barrier(timeout=60.0)
+                return x.value
+
+            results = rt.elastic_loop(step_fn, steps, step_timeout=60.0)
+            rec = rt.recoveries[-1] if rt.recoveries else {}
+            q.put(
+                (
+                    rank,
+                    {
+                        "steps": results,
+                        "resume_step": rec.get("resume"),
+                        "detect_at": rec.get("detect_at"),
+                        "reroll_s": rec.get("reroll_s"),
+                        "members": list(rt.group.members),
+                        "dead": sorted(transport.dead_ranks),
+                        "stats": transport.stats(),
+                    },
+                )
             )
-        )
     finally:
-        eng.stop()
         transport.close()
 
 
@@ -488,6 +440,218 @@ def run_elastic_ring(
             f"only {len(results)}/{survivors} survivors reported within {timeout}s"
         )
     return results, info
+
+
+def _det_grad(rank: int, step: int, n: int):
+    """Deterministic, *integer-valued* float32 pseudo-gradient.  Integer
+    values below 2**24 make float32 addition exact and associative, so the
+    ring reduction matches a plain NumPy sum bit-for-bit at any rank count
+    and in any accumulation order — the survivors-only oracle can be exact
+    even across the pre-failure full-mesh steps."""
+    import numpy as np
+
+    return (np.arange(n, dtype=np.float32) % 31.0) + np.float32(
+        (rank + 1) * (step + 3)
+    )
+
+
+def _sgd_update(params, grad_sum, n_ranks: int, lr: float):
+    """One data-parallel SGD step: ``params - lr * mean(grads)``, all in
+    float32.  Shared by the elastic training worker and the test oracle so
+    bit-exactness is by construction, not by matching promotions by hand."""
+    import numpy as np
+
+    mean = grad_sum / np.float32(n_ranks)
+    return (params - np.float32(lr) * mean).astype(np.float32)
+
+
+def _train_worker(
+    rank: int,
+    size: int,
+    port: int,
+    n: int,
+    steps: int,
+    lr: float,
+    q,
+    progress_q,
+    port_q=None,
+    hb_timeout: float = 3.0,
+    victim_hold: tuple[int, float] | None = None,
+) -> None:
+    """One elastic *training* rank: a plain data-parallel SGD loop with no
+    try/except and no recovery code — surviving a SIGKILLed peer is entirely
+    ``SpRuntime(elastic=True)``'s job (the ISSUE 8 acceptance shape).
+
+    Params are kept per step (``history[step]``) so a rewind to an earlier
+    resume step re-executes from exactly the params that step saw — state
+    indexing, not failure handling."""
+    import numpy as np
+
+    from repro.core import SpCommGroup, SpData, SpRuntime
+    from repro.dist.collectives import ring_all_reduce
+
+    transport = bootstrap_transport(
+        rank, size, port=port, heartbeat_interval=0.2, heartbeat_timeout=hb_timeout
+    )
+    if rank == 0 and port_q is not None:
+        port_q.put(transport.port)
+    try:
+        group = SpCommGroup(rank, size, transport, default_timeout=30.0)
+        history: dict[int, Any] = {0: np.zeros(n, dtype=np.float32)}
+
+        with SpRuntime(workers=2, elastic=True, group=group) as rt:
+
+            def train_step(step: int):
+                params = history[step]
+                g = SpData(_det_grad(rank, step, n), f"g{rank}e{rt.epoch}s{step}")
+                ring_all_reduce(rt.graph, rt.group, g, op="sum", tag=(rt.epoch, step))
+                progress_q.put(("step", rank, step))
+                if victim_hold is not None and step == victim_hold[0]:
+                    time.sleep(victim_hold[1])
+                rt.barrier(timeout=60.0)
+                new_params = _sgd_update(params, g.value, len(rt.group.members), lr)
+                history[step + 1] = new_params
+                return new_params
+
+            rt.elastic_loop(train_step, steps, step_timeout=60.0)
+            rec = rt.recoveries[-1] if rt.recoveries else {}
+            q.put(
+                (
+                    rank,
+                    {
+                        "params": history[steps],
+                        "resume_step": rec.get("resume"),
+                        "detect_at": rec.get("detect_at"),
+                        "reroll_s": rec.get("reroll_s"),
+                        "members": list(rt.group.members),
+                        "dead": sorted(transport.dead_ranks),
+                        "recoveries": len(rt.recoveries),
+                    },
+                )
+            )
+    finally:
+        transport.close()
+
+
+def run_elastic_train(
+    size: int = 3,
+    n: int = 257,
+    *,
+    steps: int = 5,
+    fail_at: int = 2,
+    lr: float = 0.01,
+    timeout: float = 180.0,
+    kill_delay: float = 0.02,
+    victim_hold_s: float = 2.0,
+) -> tuple[dict, dict]:
+    """SIGKILL a real OS rank mid-*training* and let the runtime recover.
+
+    Spawns ``size`` rank processes running :func:`_train_worker`'s plain SGD
+    loop under ``SpRuntime(elastic=True)``, kills the highest rank as it
+    enters step ``fail_at``'s all-reduce, and returns the survivors'
+    reports (final params, recovery record).  The expected final params are
+    :func:`elastic_train_oracle` with the resume step from any survivor —
+    bit-exact, because the pseudo-gradients are integer-valued."""
+    if size < 3:
+        raise ValueError("need >= 3 ranks: the victim must not be the router")
+    victim = size - 1  # never rank 0 — the router dies with it
+    ctx = mp.get_context("spawn")
+    q: Any = ctx.Queue()
+    progress_q: Any = ctx.Queue()
+    port_q: Any = ctx.Queue()
+    procs = [
+        ctx.Process(
+            target=_train_worker,
+            args=(0, size, 0, n, steps, lr, q, progress_q, port_q),
+            daemon=True,
+        )
+    ]
+    procs[0].start()
+    try:
+        port = port_q.get(timeout=timeout)
+    except _queue.Empty:
+        procs[0].terminate()
+        raise TimeoutError(f"rank 0 did not bind a rendezvous port within {timeout}s")
+    for r in range(1, size):
+        hold = (fail_at, victim_hold_s) if r == victim else None
+        p = ctx.Process(
+            target=_train_worker,
+            args=(r, size, port, n, steps, lr, q, progress_q, None, 3.0, hold),
+            daemon=True,
+        )
+        procs.append(p)
+        p.start()
+
+    info: dict[str, Any] = {"victim": victim, "t_kill": None}
+    results: dict[int, dict] = {}
+    survivors = size - 1
+    deadline = time.monotonic() + timeout
+    try:
+        while info["t_kill"] is None and time.monotonic() < deadline:
+            try:
+                kind, rank, step = progress_q.get(timeout=1.0)
+            except _queue.Empty:
+                continue
+            if kind == "step" and rank == victim and step == fail_at:
+                time.sleep(kill_delay)  # let its sends enter the collective
+                info["t_kill"] = time.monotonic()
+                os.kill(procs[victim].pid, signal.SIGKILL)
+        if info["t_kill"] is None:
+            raise TimeoutError(f"victim rank {victim} never reached step {fail_at}")
+        while len(results) < survivors and time.monotonic() < deadline:
+            try:
+                rank, report = q.get(timeout=1.0)
+                if rank == victim:  # pragma: no cover - the kill was too slow
+                    raise RuntimeError("the victim survived and reported")
+            except _queue.Empty:
+                bad = [
+                    (p.name, p.exitcode)
+                    for i, p in enumerate(procs)
+                    if i != victim and p.exitcode not in (None, 0)
+                ]
+                if bad:
+                    raise RuntimeError(f"a survivor rank died: {bad}")
+                continue
+            results[rank] = report
+    finally:
+        for p in procs:
+            p.join(timeout=10.0)
+            if p.is_alive():  # pragma: no cover - hung rank
+                p.terminate()
+    if len(results) < survivors:
+        raise TimeoutError(
+            f"only {len(results)}/{survivors} survivors reported within {timeout}s"
+        )
+    return results, info
+
+
+def elastic_train_oracle(
+    size: int,
+    n: int,
+    steps: int,
+    lr: float,
+    *,
+    resume_step: int,
+    dead: tuple[int, ...] = (),
+):
+    """Replay the elastic SGD run in plain NumPy: full-mesh mean-reduced
+    steps before ``resume_step``, survivors-only after.  Bit-exact against
+    :func:`_train_worker` because both use :func:`_det_grad` /
+    :func:`_sgd_update` and the gradients are integer-valued float32."""
+    import numpy as np
+
+    params = np.zeros(n, dtype=np.float32)
+    for step in range(steps):
+        ranks = [
+            r
+            for r in range(size)
+            if step < resume_step or r not in set(dead)
+        ]
+        gsum = np.zeros(n, dtype=np.float32)
+        for r in ranks:
+            gsum = gsum + _det_grad(r, step, n)
+        params = _sgd_update(params, gsum, len(ranks), lr)
+    return params
 
 
 def main(argv=None) -> None:

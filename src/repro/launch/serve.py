@@ -7,6 +7,7 @@ randomly initialized model.
 from __future__ import annotations
 
 import argparse
+import collections
 import time
 
 import jax
@@ -30,6 +31,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--deadline", type=float, default=None,
+        help="per-request deadline in seconds; expired requests are shed "
+        "from the queue or cancelled mid-decode (KV blocks freed)",
+    )
     args = ap.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -51,6 +57,7 @@ def main(argv=None) -> dict:
                 temperature=args.temperature,
                 top_k=args.top_k,
                 seed=args.seed + i,
+                deadline=args.deadline,
             )
             for i in range(args.requests)
         ]
@@ -71,10 +78,21 @@ def main(argv=None) -> dict:
             f"{pool['live_blocks']}/{pool['n_blocks']} blocks live, "
             f"{pool['shared_hits']} shared hits, {pool['evictions']} evictions"
         )
+        reject_reasons = collections.Counter(
+            r.reject_reason for r in reqs if r.rejected
+        )
+        print(
+            f"[serve] rejections: {sum(reject_reasons.values())} total "
+            f"({reject_reasons['queue_full']} queue_full, "
+            f"{reject_reasons['shed']} shed, "
+            f"{reject_reasons['deadline']} deadline), "
+            f"{stats['cancels']} mid-decode cancels"
+        )
         assert all(r.done for r in reqs)
         return {
             "tok_per_s": total_toks / dt,
             "evictions": pool["evictions"],
+            "reject_reasons": dict(reject_reasons),
             "stats": stats,
         }
 

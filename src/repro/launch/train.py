@@ -8,10 +8,14 @@ failure simulation + elastic re-mesh, resume-from-latest.
         --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ck --ckpt-every 20
 
 Elastic fault tolerance (``--fail-at STEP:RANKS``): a
-:class:`~repro.dist.fault.FailureSimulator` injects a rank loss at STEP;
-the launcher computes a :func:`~repro.dist.fault.remesh_plan` over the
-survivors (preserving model parallelism), rebuilds the mesh, and recovers
-by one of two paths (``--recovery``):
+:class:`~repro.dist.fault.FailureSimulator` injects a rank loss at STEP
+(surfaced as :class:`~repro.core.SpRankDeadError` from the step function).
+The launcher itself contains **no recovery control flow** — the training
+loop is a plain ``SpRuntime(elastic=True).elastic_loop``; the runtime
+catches the death, and this module's ``on_reshard`` hook only does the
+domain work: compute a :func:`~repro.dist.fault.remesh_plan` over the
+survivors (preserving model parallelism), rebuild the mesh, and recover
+state by one of two paths (``--recovery``):
 
 * ``live`` (default) — *live reshard*: ``jax.device_put`` the surviving
   in-memory state onto the new mesh and continue from the failed step; no
@@ -37,6 +41,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, reduced_config
+from repro.core import SpRankDeadError, SpRuntime
 from repro.data import Prefetcher, SyntheticLMDataset
 from repro.dist.fault import FailureSimulator, remesh_plan
 from repro.dist.sharding import use_mesh
@@ -103,132 +108,148 @@ def main(argv=None) -> dict:
     mesh = make_host_mesh() if n_devices > 1 else None
     lr = linear_warmup_cosine(args.lr, warmup=10, total_steps=args.steps)
 
-    start_step = 0
-    state = None
     losses: list[float] = []  # losses[i] is the loss of step base_step + i + 1
-    base_step = None
-    remeshed = False
     recoveries: list[dict] = []  # one entry per re-mesh: mode/step/seconds
-    # only checkpoints this process saved (or explicitly opted into via
-    # --resume) may be restored after a failure — a stale dir from an
-    # earlier run must not hijack the step counter
-    restorable = args.resume
+    # Mutable training-segment state shared between the step function and
+    # the reshard hook.  ``restorable``: only checkpoints this process saved
+    # (or explicitly opted into via --resume) may be restored after a
+    # failure — a stale dir from an earlier run must not hijack the step
+    # counter.
+    st: dict = {
+        "mesh": mesh, "art": None, "state": None, "pf": None,
+        "restorable": args.resume, "failed_ranks": 0,
+        "seg_t0": 0.0, "seg_steps": 0,
+    }
 
-    while start_step < args.steps:
-        failed_ranks = 0
-        ctx = use_mesh(mesh) if mesh is not None else contextlib.nullcontext()
-        with ctx:
-            art = build_train_step(
+    def _mesh_ctx():
+        return use_mesh(st["mesh"]) if st["mesh"] is not None else contextlib.nullcontext()
+
+    def _bind(start: int) -> None:
+        """(Re)build the jitted step artifact under the current mesh and
+        point the prefetch pipeline at ``start``."""
+        with _mesh_ctx():
+            st["art"] = build_train_step(
                 cfg,
                 n_microbatches=args.microbatches,
                 schedule_policy=args.schedule_policy,
                 lr_schedule=lr,
                 donate=False,
             )
-            if remeshed:
-                # re-entering after a re-mesh: live reshard keeps the
-                # surviving in-memory state (no replay, no disk); restore
-                # replays from the latest durable checkpoint
-                remeshed = False
-                t_rec = time.perf_counter()
-                can_restore = (
-                    restorable and mgr is not None and mgr.latest_step() is not None
-                )
-                if args.recovery == "live" and state is not None:
-                    state = jax.device_put(state, train_state_shardings(cfg))
-                    jax.block_until_ready(state)
-                    mode = "live"
-                    print(f"[train] live-resharded step {start_step} onto new mesh")
-                elif can_restore:
-                    start_step, state = mgr.restore(abstract_train_state(cfg))
-                    jax.block_until_ready(state)
-                    # drop losses of the steps the restore will replay
-                    if start_step < base_step:
-                        losses.clear()
-                        base_step = start_step
-                    else:
-                        del losses[start_step - base_step:]
-                    mode = "restore"
-                    print(f"[train] restored step {start_step} onto new mesh")
-                else:
-                    state = jax.device_put(state, train_state_shardings(cfg))
-                    jax.block_until_ready(state)
-                    mode = "live"
-                    print(
-                        f"[train] no restorable checkpoint; live-resharded "
-                        f"step {start_step}"
-                    )
-                recoveries.append(
-                    {
-                        "mode": mode,
-                        "step": int(start_step),
-                        "seconds": time.perf_counter() - t_rec,
-                    }
-                )
-            elif mgr is not None and args.resume and mgr.latest_step() is not None:
-                start_step, state = mgr.restore(abstract_train_state(cfg))
-                print(f"[train] resumed from step {start_step}")
-            else:
-                state = init_train_state(jax.random.PRNGKey(0), cfg)
-                if mesh is not None:
-                    state = jax.device_put(state, train_state_shardings(cfg))
-            if base_step is None:
-                base_step = start_step
+        if st["pf"] is not None:
+            st["pf"].stop()
+        st["pf"] = Prefetcher(ds, start_step=start, depth=2)
+        st["seg_t0"], st["seg_steps"] = time.perf_counter(), 0
 
-            pf = Prefetcher(ds, start_step=start_step, depth=2)
-            seg_t0, seg_steps = time.perf_counter(), 0
-            try:
-                for _ in range(start_step, args.steps):
-                    step_idx, batch = pf.get()
-                    batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                    state, metrics = art(state, batch)
-                    loss = float(metrics["loss"])
-                    losses.append(loss)
-                    seg_steps += 1
-                    s = int(state.step)
-                    if args.log_every and s % args.log_every == 0:
-                        dt = (time.perf_counter() - seg_t0) / seg_steps
-                        print(
-                            f"[train] step {s:5d} loss {loss:8.4f} "
-                            f"gnorm {float(metrics['grad_norm']):7.3f} {dt * 1e3:7.1f} ms/step",
-                            flush=True,
-                        )
-                    if mgr is not None and args.ckpt_every and s % args.ckpt_every == 0:
-                        mgr.save(s, state)  # async commit
-                        restorable = True
-                    if sim is not None:
-                        failed_ranks = sim.check(s)
-                        if failed_ranks and mesh is None:
-                            print("[train] failure injected but only one device; continuing")
-                            failed_ranks = 0
-                        if failed_ranks:
-                            break
-            finally:
-                pf.stop()
-                if mgr is not None:
-                    mgr.wait()
-            start_step = int(state.step)
+    start_step = 0
+    with _mesh_ctx():
+        if mgr is not None and args.resume and mgr.latest_step() is not None:
+            start_step, st["state"] = mgr.restore(abstract_train_state(cfg))
+            print(f"[train] resumed from step {start_step}")
+        else:
+            st["state"] = init_train_state(jax.random.PRNGKey(0), cfg)
+            if mesh is not None:
+                st["state"] = jax.device_put(st["state"], train_state_shardings(cfg))
+    base_step = start_step
+    _bind(start_step)
 
-        if not failed_ranks:
-            break
+    def train_step(step: int) -> float:
+        """One SGD step.  No failure handling anywhere: a simulated rank
+        loss raises SpRankDeadError and the elastic runtime drives the
+        recovery (re-mesh + reshard via ``on_reshard``) transparently."""
+        with _mesh_ctx():
+            _, batch = st["pf"].get()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            st["state"], metrics = st["art"](st["state"], batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        st["seg_steps"] += 1
+        s = int(st["state"].step)
+        if args.log_every and s % args.log_every == 0:
+            dt = (time.perf_counter() - st["seg_t0"]) / st["seg_steps"]
+            print(
+                f"[train] step {s:5d} loss {loss:8.4f} "
+                f"gnorm {float(metrics['grad_norm']):7.3f} {dt * 1e3:7.1f} ms/step",
+                flush=True,
+            )
+        if mgr is not None and args.ckpt_every and s % args.ckpt_every == 0:
+            mgr.save(s, st["state"])  # async commit
+            st["restorable"] = True
+        if sim is not None:
+            failed = sim.check(s)
+            if failed and st["mesh"] is None:
+                print("[train] failure injected but only one device; continuing")
+                failed = 0
+            if failed:
+                st["failed_ranks"] = failed
+                raise SpRankDeadError(
+                    f"simulated loss of {failed} ranks after step {s}"
+                )
+        return loss
+
+    def on_reshard(event) -> int:
+        """Domain half of a recovery: shrink the mesh over the survivors,
+        then live-reshard the in-memory state (no replay, no disk) or
+        restore the latest durable checkpoint.  Returns the resume step."""
+        nonlocal base_step
+        t_rec = time.perf_counter()
+        failed_ranks, st["failed_ranks"] = st["failed_ranks"], 0
         plan = remesh_plan(
-            int(np.prod(tuple(mesh.shape.values()))),
+            int(np.prod(tuple(st["mesh"].shape.values()))),
             failed_ranks,
-            model_parallel=int(mesh.shape["model"]),
+            model_parallel=int(st["mesh"].shape["model"]),
         )
         devices = np.array(jax.devices()[: plan.n_chips]).reshape(plan.shape)
-        mesh = jax.sharding.Mesh(devices, plan.axes)
-        remeshed = True
+        st["mesh"] = jax.sharding.Mesh(devices, plan.axes)
         print(
-            f"[train] lost {failed_ranks} ranks at step {start_step}; "
+            f"[train] lost {failed_ranks} ranks at step {int(st['state'].step)}; "
             f"re-meshed to {plan.shape} ({plan.dropped_chips} chips dropped)"
         )
+        can_restore = (
+            st["restorable"] and mgr is not None and mgr.latest_step() is not None
+        )
+        with _mesh_ctx():
+            if args.recovery == "restore" and can_restore:
+                resume, st["state"] = mgr.restore(abstract_train_state(cfg))
+                jax.block_until_ready(st["state"])
+                # drop losses of the steps the restore will replay
+                if resume < base_step:
+                    losses.clear()
+                    base_step = resume
+                else:
+                    del losses[resume - base_step:]
+                mode = "restore"
+                print(f"[train] restored step {resume} onto new mesh")
+            else:
+                st["state"] = jax.device_put(st["state"], train_state_shardings(cfg))
+                jax.block_until_ready(st["state"])
+                mode = "live"
+                resume = int(st["state"].step)
+                prefix = "" if args.recovery == "live" else "no restorable checkpoint; "
+                print(f"[train] {prefix}live-resharded step {resume} onto new mesh")
+        _bind(resume)
+        recoveries.append(
+            {
+                "mode": mode,
+                "step": int(resume),
+                "seconds": time.perf_counter() - t_rec,
+            }
+        )
+        return resume
+
+    try:
+        if start_step < args.steps:
+            with SpRuntime(workers=1, elastic=True, on_reshard=on_reshard) as rt:
+                rt.elastic_loop(train_step, args.steps, start=start_step)
+    finally:
+        st["pf"].stop()
+        if mgr is not None:
+            mgr.wait()
 
     if losses:
         print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
     else:
         print("[train] nothing to do: start step >= --steps")
-    final_step = int(state.step) if state is not None else start_step
+    final_step = int(st["state"].step) if st["state"] is not None else start_step
     result = {"losses": losses, "final_step": final_step, "recoveries": recoveries}
     if args.bench_out:
         with open(args.bench_out, "w") as f:

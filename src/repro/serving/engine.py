@@ -120,17 +120,26 @@ class Request:
     """One serving request.  ``temperature == 0`` (default) decodes greedily;
     otherwise tokens are drawn from the temperature-scaled, top-k-filtered
     distribution with a PRNG stream seeded per request (``seed``) and folded
-    per step — two runs with the same seed produce the same tokens."""
+    per step — two runs with the same seed produce the same tokens.
+
+    ``deadline`` is an absolute ``time.perf_counter()`` timestamp: once it
+    passes, the request is shed from the queue or cancelled mid-decode
+    (KV blocks released) rather than finishing work nobody will read.
+    ``reject_reason`` says why a rejected request was turned away:
+    ``"queue_full"``, ``"shed"``, or ``"deadline"``."""
 
     prompt: np.ndarray  # (L,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0
     top_k: int = 0  # 0 = no top-k filter
     seed: int = 0
+    deadline: Optional[float] = None  # absolute perf_counter seconds
     req_id: int = field(default_factory=lambda: next(_req_ids))
     out_tokens: list = field(default_factory=list)
     done: bool = False
     rejected: bool = False
+    reject_reason: Optional[str] = None
+    cancelled: bool = False
     # continuous-batching bookkeeping
     pending_tok: Optional[int] = None  # sampled (or prompt tail) token not yet fed
     admit_order: int = -1
@@ -139,6 +148,13 @@ class Request:
     t_arrival: Optional[float] = None
     t_first: Optional[float] = None
     t_tokens: list = field(default_factory=list)
+
+    def cancel(self) -> None:
+        """Withdraw the request.  Safe from any thread: the flag is acted on
+        at the next scheduling point — a waiting request is dropped by
+        ``plan()``, a running one is evicted by the collect codelet with its
+        KV blocks released mid-decode."""
+        self.cancelled = True
 
 
 # ---------------------------------------------------------------------------
@@ -168,6 +184,12 @@ def _collect_codelet(state, *, eng):
     for slot in sorted(eng._slot_req):
         req = eng._slot_req.get(slot)
         if req is None:  # preempted as a victim earlier in this loop
+            continue
+        if req.cancelled:
+            eng._cancel_slot(slot, reason=None)
+            continue
+        if req.deadline is not None and now > req.deadline:
+            eng._cancel_slot(slot, reason="deadline")
             continue
         # the token decoded this step was ``pending_tok``; its KV row now
         # exists, so account it into the block table (may COW / preempt)
@@ -282,6 +304,7 @@ class ServeEngine:
         self.steps = 0
         self.prefills = 0
         self.restores = 0
+        self.cancels = 0
         self.closed = False
 
         self._decode, self._prefill = _jitted_steps(cfg)
@@ -298,9 +321,12 @@ class ServeEngine:
         temperature: float = 0.0,
         top_k: int = 0,
         seed: int = 0,
+        deadline: Optional[float] = None,
     ) -> Request:
         """Enqueue a request (thread-safe).  Raises AdmissionError when the
-        bounded queue is full under the ``"reject"`` overload policy."""
+        bounded queue is full under the ``"reject"`` overload policy.
+        ``deadline`` is *relative* seconds from now; past it the request is
+        shed (queued) or cancelled with its KV blocks freed (running)."""
         if self.closed:
             raise RuntimeError("ServeEngine is closed")
         prompt = np.asarray(prompt, np.int32)
@@ -309,14 +335,16 @@ class ServeEngine:
                 f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
                 f"exceeds max_seq ({self.max_seq})"
             )
+        now = time.perf_counter()
         req = Request(
             prompt,
             max_new_tokens,
             temperature=float(temperature),
             top_k=int(top_k),
             seed=int(seed),
+            deadline=None if deadline is None else now + float(deadline),
         )
-        req.t_arrival = time.perf_counter()
+        req.t_arrival = now
         self.scheduler.submit(req)
         return req
 
@@ -354,6 +382,7 @@ class ServeEngine:
             "steps": self.steps,
             "prefills": self.prefills,
             "restores": self.restores,
+            "cancels": self.cancels,
             "running": self.n_running,
             "pageable": self._pageable,
         }
@@ -421,6 +450,20 @@ class ServeEngine:
         self._writeback(slot, req)
         self.pool.release(req.req_id, keep_resident=True)
         self.scheduler.free_slot(slot)
+
+    def _cancel_slot(self, slot: int, *, reason: Optional[str]) -> None:
+        """Evict a running sequence whose output is no longer wanted
+        (user ``cancel()`` or expired deadline): its KV blocks are freed
+        immediately — no resumable writeback, unreferenced blocks returned
+        to the pool mid-decode — and the slot rejoins the free list."""
+        req = self._slot_req.pop(slot)
+        req.done = True
+        if reason is not None:
+            req.rejected = True
+            req.reject_reason = reason
+        self.pool.release(req.req_id, keep_resident=False)
+        self.scheduler.free_slot(slot)
+        self.cancels += 1
 
     def _preempt(self, slot: int) -> None:
         """Evict a running sequence: save its KV rows, release its blocks

@@ -8,7 +8,19 @@ that plane:
   **bounded** wait queue with an overload policy: ``"reject"`` raises
   :class:`AdmissionError` at submit time (backpressure to the caller),
   ``"shed-oldest"`` drops the longest-waiting request (marked
-  ``req.rejected``) to make room for the newcomer.
+  ``req.rejected``) to make room for the newcomer.  Every rejected request
+  carries ``req.reject_reason`` — ``"queue_full"`` (reject policy),
+  ``"shed"`` (overflow victim), or ``"deadline"`` (expired before it could
+  be served) — so callers can distinguish overload from latency misses.
+
+* Deadlines (ISSUE 8): a request submitted with ``deadline=`` (absolute
+  ``time.perf_counter()`` seconds) is shed instead of admitted once the
+  deadline passes — serving a request nobody is still waiting for wastes
+  slots and KV blocks that on-time requests need.  The overflow shed is
+  deadline-aware too: an already-expired waiter is preferred as the victim
+  over the oldest viable one.  Mid-decode expiry and user ``cancel()`` are
+  handled engine-side in the collect codelet (the only place slot state
+  may be mutated), which releases the sequence's KV blocks immediately.
 
 * :meth:`ServeScheduler.plan` decides, between engine iterations, which
   waiting requests join the decode batch.  A request is admitted only when
@@ -38,6 +50,7 @@ from __future__ import annotations
 import collections
 import itertools
 import threading
+import time
 from dataclasses import dataclass
 from typing import Optional
 
@@ -83,24 +96,51 @@ class ServeScheduler:
         self.shed = 0
         self.admitted = 0
         self.preemptions = 0
+        self.deadline_shed = 0
+        self.cancelled = 0
 
     # ------------------------------------------------------------- queueing
 
     def submit(self, req) -> None:
-        """Enqueue; on overflow apply the overload policy."""
+        """Enqueue; on overflow apply the overload policy.  The shed is
+        deadline-aware: an already-expired waiter is evicted in preference
+        to the oldest still-viable one."""
         with self._lock:
             if len(self._waiting) >= self.max_queue:
                 if self.overload == "reject":
                     self.rejected += 1
+                    req.rejected = True
+                    req.reject_reason = "queue_full"
+                    req.done = True
                     raise AdmissionError(
                         f"admission queue full ({self.max_queue} waiting); "
                         "request rejected"
                     )
-                victim = self._waiting.popleft()
-                victim.rejected = True
-                victim.done = True
-                self.shed += 1
+                idx, reason = self._pick_shed_victim()
+                victim = self._waiting[idx]
+                del self._waiting[idx]  # by index: Request.__eq__ is not usable
+                self._drop(victim, reason)
             self._waiting.append(req)
+
+    def _pick_shed_victim(self):
+        """(index, reason) under shed-oldest overflow: the first expired
+        waiter if any, else the longest-waiting one.  Caller holds _lock."""
+        now = time.perf_counter()
+        for i, cand in enumerate(self._waiting):
+            dl = getattr(cand, "deadline", None)
+            if dl is not None and now > dl:
+                return i, "deadline"
+        return 0, "shed"
+
+    def _drop(self, req, reason: str) -> None:
+        """Mark a waiting request rejected and count it.  Caller holds _lock."""
+        req.rejected = True
+        req.reject_reason = reason
+        req.done = True
+        if reason == "deadline":
+            self.deadline_shed += 1
+        else:
+            self.shed += 1
 
     def requeue(self, req) -> None:
         """Put a preempted request back at the head of the queue."""
@@ -127,9 +167,22 @@ class ServeScheduler:
     def plan(self, *, pageable: bool) -> list[Admission]:
         """Admit waiting requests while slots and blocks allow.  Block
         allocation happens here (driver thread, graph drained) so the
-        admission either fully reserves its memory or stays queued."""
+        admission either fully reserves its memory or stays queued.
+        Cancelled and deadline-expired waiters are dropped first — admitting
+        them would spend prefill compute and KV blocks on dead work."""
         out: list[Admission] = []
+        now = time.perf_counter()
         with self._lock:
+            keep: collections.deque = collections.deque()
+            for req in self._waiting:
+                if getattr(req, "cancelled", False):
+                    req.done = True
+                    self.cancelled += 1
+                elif getattr(req, "deadline", None) is not None and now > req.deadline:
+                    self._drop(req, "deadline")
+                else:
+                    keep.append(req)
+            self._waiting = keep
             while self._waiting and self._free_slots:
                 req = self._waiting[0]
                 try:
@@ -188,5 +241,7 @@ class ServeScheduler:
             "admitted": self.admitted,
             "rejected": self.rejected,
             "shed": self.shed,
+            "deadline_shed": self.deadline_shed,
+            "cancelled": self.cancelled,
             "preemptions": self.preemptions,
         }

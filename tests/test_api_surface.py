@@ -45,6 +45,8 @@ EXPECTED = sorted([
     "execute_staged", "linearize", "schedule_summary", "trace_metrics",
     # task internals
     "Task", "TaskState", "TaskView",
+    # robustness (ISSUE 8): policies, watchdog timeout, elastic runtime
+    "ElasticEvent", "SpTaskPolicy", "SpTaskTimeoutError",
 ])
 
 

@@ -1,0 +1,273 @@
+"""Self-healing runtime (ISSUE 8): task-level retry/timeout/quarantine
+policies and the hung-task watchdog, the elastic ``SpRuntime`` that
+recovers from a real SIGKILLed OS rank *inside* the runtime (the training
+script has zero failure handling), serving deadlines / per-request
+cancellation, configurable heartbeats, and the seeded chaos soak harness."""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    SocketTransport,
+    SpComputeEngine,
+    SpData,
+    SpRuntime,
+    SpTaskPolicy,
+    SpTaskTimeoutError,
+    SpWorkerTeamBuilder,
+    sp_task,
+)
+
+# The SIGKILL acceptance test spawns real OS ranks; raise the CI per-test cap.
+pytestmark = pytest.mark.timeout(240)
+
+
+# ---------------------------------------------------------------------------
+# SpTaskPolicy: declaration and validation
+# ---------------------------------------------------------------------------
+
+def test_policy_validation():
+    p = SpTaskPolicy(retries=2, timeout=1.0)
+    assert p.on_failure == "retry"  # auto: retries imply retry
+    assert SpTaskPolicy().on_failure == "raise"
+    with pytest.raises(ValueError):
+        SpTaskPolicy(retries=-1)
+    with pytest.raises(ValueError):
+        SpTaskPolicy(timeout=0.0)
+    with pytest.raises(ValueError):
+        SpTaskPolicy(on_failure="explode")
+
+
+def test_timeout_error_type():
+    # catchable both as the runtime's typed error and the stdlib family
+    assert issubclass(SpTaskTimeoutError, TimeoutError)
+
+
+# ---------------------------------------------------------------------------
+# retry: transient failures re-execute in place
+# ---------------------------------------------------------------------------
+
+def test_retry_transient_failure_recovers():
+    calls = {"n": 0}
+
+    @sp_task(write=("out",), retries=3, name="flaky")
+    def flaky(out):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        out.value = calls["n"]
+
+    out = SpData(None, "out")
+    with SpRuntime(workers=2) as rt:
+        view = flaky(out)
+        assert view.result(timeout=10.0) is None  # writes via slot
+    assert out.value == 3
+    assert view.task.retries_used == 2
+
+
+def test_retry_exhaustion_surfaces_original_error():
+    @sp_task(read=("x",), retries=2, name="doomed")
+    def doomed(x):
+        raise ValueError(f"always fails on {x}")
+
+    with SpRuntime(workers=2) as rt:
+        view = doomed(SpData(7, "x"))
+        with pytest.raises(ValueError, match="always fails on 7"):
+            view.result(timeout=10.0)
+        assert view.task.retries_used == 2
+
+
+def test_per_call_policy_overrides_codelet_default():
+    calls = {"n": 0}
+
+    @sp_task(read=("x",), name="once")  # no retries declared
+    def once(x):
+        calls["n"] += 1
+        if calls["n"] < 2:
+            raise OSError("transient")
+        return x * 2
+
+    with SpRuntime(workers=2) as rt:
+        view = once(SpData(21, "x"), retries=2)  # call-site policy wins
+        assert view.result(timeout=10.0) == 42
+
+
+# ---------------------------------------------------------------------------
+# watchdog: hung tasks fail with SpTaskTimeoutError; zombies can't write back
+# ---------------------------------------------------------------------------
+
+def test_watchdog_times_out_hung_task():
+    release = threading.Event()
+
+    @sp_task(read=("x",), timeout=0.2, on_failure="quarantine", name="hung")
+    def hung(x):
+        release.wait(30.0)
+
+    t0 = time.perf_counter()
+    with SpRuntime(workers=2) as rt:
+        view = hung(SpData(1, "x"))
+        with pytest.raises(SpTaskTimeoutError, match="hung"):
+            view.result(timeout=10.0)
+        waited = time.perf_counter() - t0
+        assert 0.2 <= waited < 5.0  # detected promptly, not at scope teardown
+        release.set()  # unblock the zombie so shutdown is clean
+
+
+def test_zombie_writeback_is_discarded():
+    gate = threading.Event()
+
+    @sp_task(write=("out",), timeout=0.1, on_failure="quarantine", name="zombie")
+    def zombie(out):
+        gate.wait(10.0)  # hang past the timeout...
+        out.value = "from the grave"  # ...then try to write anyway
+
+    out = SpData(None, "out")
+    with SpRuntime(workers=2) as rt:
+        view = zombie(out)
+        with pytest.raises(SpTaskTimeoutError):
+            view.result(timeout=10.0)
+        gate.set()  # let the zombie body finish its write attempt
+        time.sleep(0.2)
+    assert out.value is None  # the abandoned body's write never landed
+
+
+# ---------------------------------------------------------------------------
+# quarantine: poison tasks are isolated, dependents cancel, graph survives
+# ---------------------------------------------------------------------------
+
+def test_quarantine_cancels_dependents_spares_siblings():
+    @sp_task(write=("a",), on_failure="quarantine", name="poison")
+    def poison(a):
+        raise RuntimeError("poison pill")
+
+    @sp_task(read=("a",), write=("b",), name="dependent")
+    def dependent(a, b):
+        b.value = a + 1
+
+    @sp_task(write=("c",), name="sibling")
+    def sibling(c):
+        c.value = "fine"
+
+    a, b, c = SpData(None, "a"), SpData(None, "b"), SpData(None, "c")
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(2))
+    try:
+        with SpRuntime(engine=eng) as rt:
+            pv = poison(a)
+            dv = dependent(a, b)
+            sv = sibling(c)
+            with pytest.raises(RuntimeError, match="poison pill"):
+                pv.result(timeout=10.0)
+            with pytest.raises(CancelledError):
+                dv.result(timeout=10.0)
+            assert sv.result(timeout=10.0) is None
+            assert c.value == "fine" and b.value is None
+            # the graph is still alive: new work runs after the quarantine
+            assert sibling(SpData(None, "c2")).result(timeout=10.0) is None
+    finally:
+        report = eng.stop()
+    # the shutdown report names the quarantined task
+    assert any("poison" in name for name in report), report
+
+
+def test_quarantine_error_does_not_fail_the_scope():
+    @sp_task(read=("x",), on_failure="quarantine", name="contained")
+    def contained(x):
+        raise RuntimeError("contained failure")
+
+    # no .result() observation anywhere: a quarantined error must still not
+    # re-raise at scope exit (that is the difference from on_failure="raise")
+    with SpRuntime(workers=2) as rt:
+        contained(SpData(1, "x"))
+        rt.wait_all_tasks(timeout=10.0)
+        assert [t.name for t in rt.graph.quarantined] == ["contained"]
+
+
+# ---------------------------------------------------------------------------
+# configurable heartbeat (SocketTransport knobs + env override)
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_knobs_resolution():
+    t = SocketTransport(0, 1, heartbeat=0.1, staleness_factor=5.0)
+    try:
+        assert t._hb_interval == pytest.approx(0.1)
+        assert t._router._hb_timeout == pytest.approx(0.5)
+    finally:
+        t.close()
+    with pytest.raises(ValueError):
+        SocketTransport(0, 1, heartbeat=0.1, heartbeat_interval=0.2)
+    with pytest.raises(ValueError):
+        SocketTransport(0, 1, heartbeat_timeout=3.0, staleness_factor=4.0)
+    with pytest.raises(ValueError):
+        SocketTransport(0, 1, heartbeat=0.0)
+
+
+def test_heartbeat_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_HB_INTERVAL", "0.25")
+    t = SocketTransport(0, 1)
+    try:
+        assert t._hb_interval == pytest.approx(0.25)
+        assert t._router._hb_timeout == pytest.approx(5.0)  # interval x 20
+    finally:
+        t.close()
+
+
+# ---------------------------------------------------------------------------
+# the acceptance run: a real OS rank SIGKILLed mid-training; the training
+# loop contains no try/except — recovery happens inside SpRuntime — and the
+# survivors' final params are bit-exact vs the survivors-only oracle
+# ---------------------------------------------------------------------------
+
+def test_sigkill_rank_mid_training_recovers_in_runtime_bit_exact():
+    from repro.launch.rendezvous import elastic_train_oracle, run_elastic_train
+
+    size, n, steps, lr = 3, 257, 5, 0.01
+    results, info = run_elastic_train(size=size, n=n, steps=steps, fail_at=2, lr=lr)
+    assert set(results) == {0, 1}
+    resumes = {rep["resume_step"] for rep in results.values()}
+    assert len(resumes) == 1 and None not in resumes
+    resume = resumes.pop()
+    expected = elastic_train_oracle(
+        size, n, steps, lr, resume_step=resume, dead=(info["victim"],)
+    )
+    for rank, rep in results.items():
+        assert rep["recoveries"] == 1
+        assert rep["dead"] == [info["victim"]]
+        # detection latency: dead within seconds of the SIGKILL, never before
+        lat = rep["detect_at"] - info["t_kill"]
+        assert -0.05 < lat < 5.0, lat
+        assert rep["reroll_s"] < 30.0
+        np.testing.assert_array_equal(rep["params"], expected)
+
+
+# ---------------------------------------------------------------------------
+# chaos soak harness (seeded; CI runs 3 seeds x 20 iterations via the CLI)
+# ---------------------------------------------------------------------------
+
+def test_chaos_collectives_bit_exact_under_link_faults():
+    from repro.dist.chaos import chaos_collectives
+
+    stats = chaos_collectives(seed=0, iters=6)
+    assert stats["escalations"] == 0
+    assert sum(stats["faults"].values()) > 0  # the schedule actually injected
+
+
+def test_chaos_elastic_inprocess_rank_death():
+    from repro.dist.chaos import chaos_elastic
+
+    stats = chaos_elastic(seed=0, iters=5)
+    assert stats["resume"] is not None
+
+
+def test_chaos_serve_invariants():
+    from repro.dist.chaos import chaos_serve
+
+    stats = chaos_serve(seed=0, iters=4)
+    assert stats["completed"] > 0
+    assert stats["requests"] == stats["completed"] + stats["deadline_shed"] \
+        + stats["shed"] + stats["cancels"] + stats["cancelled_q"]
