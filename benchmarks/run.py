@@ -20,6 +20,9 @@ Entries:
   load, persisted to ``BENCH_serving.json`` (``--smoke`` also runs this
   section and, with ``--serving-baseline``, exits non-zero on a >2×
   continuous-mode throughput regression)
+* serving_spec_decode — speculative decoding (fitted 1-layer draft, k=4)
+  vs plain decode on the same workload; the spec/plain speedup ratio is
+  gated against the checked-in baseline alongside the throughput row
 """
 from __future__ import annotations
 
@@ -89,6 +92,14 @@ def _serving_section(smoke: bool, out: str, baseline: str | None) -> None:
             f";ttft_p99_ms={r['ttft_p99_ms']:.1f}"
             f";itl_p99_ms={r['itl_p99_ms']:.1f}",
         )
+    sd = payload["spec_decode"]
+    _row(
+        "serving_spec_decode",
+        1e6 / sd["spec"]["tokens_per_s"] if sd["spec"]["tokens_per_s"] else 0.0,
+        f"accept_rate={sd['spec']['accept_rate']:.2f}"
+        f";accepted_tokens_per_step={sd['spec']['accepted_tokens_per_step']:.2f}"
+        f";decode_speedup={sd['decode_speedup']:.2f}x",
+    )
     if baseline and os.path.exists(baseline):
         with open(baseline) as f:
             base = json.load(f)

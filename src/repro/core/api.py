@@ -476,6 +476,19 @@ def sp_task(
     task on ``graph.quarantined``, cancel dependents with
     ``CancelledError``, let siblings finish).  Every knob can be overridden
     per call: ``codelet(x, y, retries=3, timeout=0.5)``.
+
+    Speculation (ISSUE 9): a ``maybe=`` slot makes every inserted task an
+    *uncertain writer* — on a graph built with ``SP_MODEL_1``/``SP_MODEL_2``
+    a later codelet reading that cell is speculated past it (chains of
+    maybe-writers share one snapshot under ``SP_MODEL_2``; see
+    ``core/speculation.py``).  A body that leaves the slot untouched
+    resolves as "did not write"; assigning ``slot.value`` — even its own
+    current value — forces the reader's rollback re-execution.  Because a
+    speculated body may run twice, it must be pure in everything except
+    idempotent effects; externally visible mutation belongs in a follow-up
+    certain-``write`` codelet, which only runs after the outcome is known
+    (``repro.serving.spec`` is the worked example: draft = maybe-writer,
+    verify = speculated reader, commit = certain write).
     """
 
     def wrap(f: Callable) -> SpCodelet:

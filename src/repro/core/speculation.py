@@ -31,6 +31,28 @@ The paper's two speculative models are both implemented:
 Commutative/atomic accesses and array views in the reader bail out to
 normal insertion.  Communication tasks refuse speculation entirely (paper
 §4.4 limitation, enforced in ``comm.py``).
+
+Speculative **decoding** (``repro.serving.spec``) is this machinery applied
+to LM serving — the mapping from the paper's abstractions to the decoder:
+
+* each *draft* step is an uncertain writer (``maybe``) on the engine's
+  per-batch decode-state cell: it proposes tokens with a cheap draft model
+  and normally leaves the real state untouched (``written == False``); it
+  writes only to poison the round when the scheduler sheds speculation or
+  a rollback is forced;
+* the *verify* task reads that cell, so under ``SP_MODEL_2`` it overlaps
+  the whole k-deep draft chain, running the target model's batched
+  multi-position forward against the chain's shared snapshot;
+* *commit* performs the certain WRITE that clears the uncertainty marker
+  and publishes accepted tokens + KV rows — or, when a drafter wrote, the
+  runtime re-runs verify's body on the real state (rollback) before commit
+  sees its output, exactly case (b) above.
+
+Acceptance/rejection of individual drafted tokens happens *inside* the
+verify body (committed tokens are always the target model's own samples,
+which keeps greedy and seeded-sampling decode bit-exact with the
+non-speculative engine); the graph-level commit/rollback handles the
+coarser question of whether the whole round's snapshot was stale.
 """
 from __future__ import annotations
 

@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.models import init_params
-from repro.serving import ServeEngine
+from repro.serving import ServeEngine, shrunken_draft
 
 
 def main(argv=None) -> dict:
@@ -36,11 +36,35 @@ def main(argv=None) -> dict:
         help="per-request deadline in seconds; expired requests are shed "
         "from the queue or cancelled mid-decode (KV blocks freed)",
     )
+    ap.add_argument(
+        "--max-batch", type=int, default=None,
+        help="cap on concurrently decoding sequences (default: all slots)",
+    )
+    ap.add_argument(
+        "--admit-max-wait", type=float, default=0.0,
+        help="batching window in seconds: hold admissions so near-"
+        "simultaneous arrivals join the decode batch together",
+    )
+    ap.add_argument(
+        "--draft-k", type=int, default=0,
+        help="speculative decoding draft depth (0 = off); the draft model "
+        "is a --draft-layers-layer truncation of the target's own weights",
+    )
+    ap.add_argument(
+        "--draft-layers", type=int, default=1,
+        help="number of target layers kept in the shrunken draft model",
+    )
     args = ap.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
+
+    draft_cfg = draft_params = None
+    if args.draft_k > 0:
+        draft_cfg, draft_params = shrunken_draft(
+            cfg, params, n_layers=args.draft_layers
+        )
 
     with ServeEngine(
         cfg,
@@ -48,6 +72,11 @@ def main(argv=None) -> dict:
         n_slots=args.slots,
         max_seq=args.max_seq,
         block_size=args.block_size,
+        max_batch=args.max_batch,
+        admit_max_wait=args.admit_max_wait,
+        draft_cfg=draft_cfg,
+        draft_params=draft_params,
+        draft_k=max(args.draft_k, 1),
     ) as eng:
         t0 = time.perf_counter()
         reqs = [
@@ -78,6 +107,14 @@ def main(argv=None) -> dict:
             f"{pool['live_blocks']}/{pool['n_blocks']} blocks live, "
             f"{pool['shared_hits']} shared hits, {pool['evictions']} evictions"
         )
+        if "spec" in stats:
+            sp = stats["spec"]
+            print(
+                f"[serve] speculation: k={sp['draft_k']}, {sp['rounds']} rounds "
+                f"({sp['rollback_rounds']} rolled back, {sp['sheds']} shed), "
+                f"accept rate {sp['accept_rate']:.2f}, "
+                f"{sp['accepted_per_round']:.2f} tokens/round committed"
+            )
         reject_reasons = collections.Counter(
             r.reject_reason for r in reqs if r.rejected
         )

@@ -22,6 +22,7 @@ from repro.models.transformer import (
     model_defs,
     param_shardings,
     prefill,
+    verify_step,
 )
 
 __all__ = [
@@ -29,5 +30,5 @@ __all__ = [
     "ShapeSpec", "SSMConfig", "applicable_shapes", "abstract_cache",
     "abstract_inputs", "abstract_params", "cache_layout", "decode_step",
     "forward", "init_cache", "init_params", "input_defs", "loss_fn",
-    "model_defs", "param_shardings", "prefill",
+    "model_defs", "param_shardings", "prefill", "verify_step",
 ]

@@ -464,6 +464,36 @@ def decode_step(params: dict, tokens: jax.Array, caches, pos, cfg: ArchConfig):
     return logits, new_caches
 
 
+def verify_step(params: dict, tokens: jax.Array, caches, pos, cfg: ArchConfig,
+                advance=None):
+    """Multi-position decode for speculative-decoding verification.
+
+    Feeds ``tokens`` (B, T) int32 one position at a time starting at ``pos``
+    (scalar or (B,) int32) and returns the logits of **every** position:
+    ``(logits (B, T, V), new caches)``.  ``advance`` (optional, (B,) int32
+    0/1) lets sequences opt out of advancing — a slot with ``advance == 0``
+    re-feeds its token at the same position each sub-step (an idempotent KV
+    row rewrite), which is how non-speculative requests ride along in a
+    mixed verification batch.
+
+    Implementation note: the loop body is *exactly* :func:`decode_step`, so
+    per-position numerics (einsum reduction orders, masking, softmax) are
+    identical to the plain decode path — this is what makes greedy
+    speculative decoding bit-exact against the non-speculative oracle.  The
+    whole loop jits into one XLA call (T is static), so the runtime sees a
+    single batched verify forward per round.
+    """
+    T = tokens.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    adv = None if advance is None else jnp.asarray(advance, jnp.int32)
+    outs = []
+    for j in range(T):
+        pj = pos + (j if adv is None else j * adv)
+        logits_j, caches = decode_step(params, tokens[:, j:j + 1], caches, pj, cfg)
+        outs.append(logits_j)
+    return jnp.concatenate(outs, axis=1), caches
+
+
 # ---------------------------------------------------------------------------
 # Cache + input specs (ShapeDtypeStruct stand-ins for the dry-run)
 # ---------------------------------------------------------------------------

@@ -19,6 +19,7 @@ from repro.models import (
     abstract_params,
     decode_step,
     prefill,
+    verify_step,
 )
 from repro.models.config import ArchConfig, ShapeSpec
 from repro.models.param import ParamDef, sharding_tree
@@ -129,6 +130,19 @@ def build_decode_fn(cfg: ArchConfig, *, jit: bool = True):
         return next_tok, new_caches
 
     return jax.jit(decode_fn, donate_argnums=(2,)) if jit else decode_fn
+
+
+def build_verify_fn(cfg: ArchConfig, *, jit: bool = True):
+    """Speculative-decoding verify forward: (params, tokens (B, T), caches,
+    pos (B,), advance (B,)) → (logits (B, T, V), caches).  One jitted XLA
+    call evaluates all T positions (retraced per T, which is static per
+    draft depth); the per-position math is exactly
+    :func:`repro.models.verify_step`'s unrolled ``decode_step``, which keeps
+    greedy verification bit-exact against the plain decode path."""
+    def verify_fn(params, tokens, caches, pos, advance):
+        return verify_step(params, tokens, caches, pos, cfg, advance=advance)
+
+    return jax.jit(verify_fn, donate_argnums=(2,)) if jit else verify_fn
 
 
 def build_serve_step(cfg: ArchConfig, shape: ShapeSpec, *, jit: bool = True):

@@ -7,6 +7,10 @@
                  admission planning, preemption victims.
 ``engine``     — :class:`ServeEngine`: continuously-batched decoding on one
                  persistent SpTaskGraph; per-request sampling controls.
+``spec``       — :class:`SpecDecoder`: draft-model speculative decoding as
+                 SP_MODEL_2 uncertain-writer chains on the engine's
+                 batch-state cell (commit/rollback via the runtime's
+                 speculation machinery).
 ``loadgen``    — seeded Poisson load generator + latency metrics for
                  ``benchmarks/serving_bench.py``.
 """
@@ -14,6 +18,7 @@ from repro.serving.engine import Request, ServeEngine
 from repro.serving.kvcache import BlockTable, KVBlock, KVPagePool, PageError
 from repro.serving.loadgen import LoadSpec, build_workload, run_load
 from repro.serving.scheduler import Admission, AdmissionError, ServeScheduler
+from repro.serving.spec import SpecDecoder, shrunken_draft
 
 __all__ = [
     "Admission",
@@ -26,6 +31,8 @@ __all__ = [
     "Request",
     "ServeEngine",
     "ServeScheduler",
+    "SpecDecoder",
     "build_workload",
     "run_load",
+    "shrunken_draft",
 ]

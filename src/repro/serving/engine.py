@@ -50,6 +50,7 @@ import numpy as np
 from repro.core import (
     SpComputeEngine,
     SpData,
+    SpSpeculativeModel,
     SpTaskGraph,
     SpWorkerTeamBuilder,
     graph_scope,
@@ -126,7 +127,12 @@ class Request:
     passes, the request is shed from the queue or cancelled mid-decode
     (KV blocks released) rather than finishing work nobody will read.
     ``reject_reason`` says why a rejected request was turned away:
-    ``"queue_full"``, ``"shed"``, or ``"deadline"``."""
+    ``"queue_full"``, ``"shed"``, or ``"deadline"``.
+
+    ``speculative`` requests decode through draft/verify/commit rounds when
+    the engine has a draft model; ``out_tokens``/``t_tokens``/``on_token``
+    only ever see *committed* tokens (drafted-but-unverified tokens live in
+    the speculation machinery's uncommitted state)."""
 
     prompt: np.ndarray  # (L,) int32
     max_new_tokens: int = 16
@@ -134,6 +140,8 @@ class Request:
     top_k: int = 0  # 0 = no top-k filter
     seed: int = 0
     deadline: Optional[float] = None  # absolute perf_counter seconds
+    speculative: bool = False
+    on_token: Optional[callable] = None  # per committed token, engine thread
     req_id: int = field(default_factory=lambda: next(_req_ids))
     out_tokens: list = field(default_factory=list)
     done: bool = False
@@ -144,10 +152,31 @@ class Request:
     pending_tok: Optional[int] = None  # sampled (or prompt tail) token not yet fed
     admit_order: int = -1
     preemptions: int = 0
+    # speculative-decoding telemetry
+    spec_rounds: int = 0
+    spec_accepted: int = 0
     # latency telemetry (perf_counter seconds), consumed by the load generator
     t_arrival: Optional[float] = None
     t_first: Optional[float] = None
     t_tokens: list = field(default_factory=list)
+
+    def stream(self, poll: float = 0.001, timeout: Optional[float] = None):
+        """Incremental iterator over committed tokens: yields each token of
+        ``out_tokens`` as it lands, returning when the request finishes.
+        Drive it from a different thread than the engine loop (the engine
+        must keep stepping for tokens to arrive); ``out_tokens`` is
+        append-only, so a plain cursor is race-free under the GIL."""
+        i = 0
+        t0 = time.perf_counter()
+        while True:
+            while i < len(self.out_tokens):
+                yield self.out_tokens[i]
+                i += 1
+            if self.done:
+                return
+            if timeout is not None and time.perf_counter() - t0 > timeout:
+                raise TimeoutError(f"request {self.req_id}: stream timed out")
+            time.sleep(poll)
 
     def cancel(self) -> None:
         """Withdraw the request.  Safe from any thread: the flag is acted on
@@ -207,6 +236,7 @@ def _collect_codelet(state, *, eng):
         if req.t_first is None:
             req.t_first = now
         req.t_tokens.append(now)
+        eng._emit_token(req, new)
         if len(req.out_tokens) >= req.max_new_tokens or eng._pos[slot] >= eng.max_seq:
             eng._finish(slot)
 
@@ -233,6 +263,7 @@ def _install_codelet(state, out, *, eng, req, slot):
         req.pending_tok = first
         req.t_first = time.perf_counter()
         req.t_tokens.append(req.t_first)
+        eng._emit_token(req, first)
     caches, tok = eng._install(
         st["caches"], primed, st["tok"], jnp.int32(slot), jnp.int32(req.pending_tok)
     )
@@ -241,6 +272,8 @@ def _install_codelet(state, out, *, eng, req, slot):
     state.value = {"caches": caches, "tok": tok}
     eng._caches = caches
     eng._last_tok = tok
+    if eng._spec is not None and req.speculative:
+        eng._spec.prime_slot(slot, req)
 
 
 @sp_task(write=("state",), name="serve.restore")
@@ -255,6 +288,8 @@ def _restore_codelet(state, *, eng, req, slot, rows, n_rows):
     state.value = {"caches": caches, "tok": tok}
     eng._caches = caches
     eng._last_tok = tok
+    if eng._spec is not None and req.speculative:
+        eng._spec.prime_slot(slot, req)
 
 
 class ServeEngine:
@@ -275,6 +310,11 @@ class ServeEngine:
         n_blocks: Optional[int] = None,
         max_queue: int = 64,
         overload: str = "reject",
+        max_batch: Optional[int] = None,
+        admit_max_wait: float = 0.0,
+        draft_cfg=None,
+        draft_params=None,
+        draft_k: int = 4,
         engine: Optional[SpComputeEngine] = None,
     ):
         self.cfg = cfg
@@ -285,7 +325,9 @@ class ServeEngine:
             n_blocks = n_slots * math.ceil(max_seq / block_size)
         self.pool = KVPagePool(n_blocks, block_size)
         self.scheduler = ServeScheduler(
-            self.pool, n_slots, max_queue=max_queue, overload=overload
+            self.pool, n_slots, max_queue=max_queue, overload=overload,
+            max_batch=max_batch, admit_max_wait=admit_max_wait,
+            draft_k=draft_k if draft_cfg is not None else 0,
         )
         self._layout = cache_layout(cfg)
         self._pageable = self._layout is not None
@@ -295,12 +337,8 @@ class ServeEngine:
         self._last_tok = jnp.zeros((n_slots, 1), jnp.int32)
         self._own_engine = engine is None
         self.engine = engine or SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(2))
-        # ONE persistent graph for the engine's lifetime; every iteration
-        # chains its codelets onto the same batch-state cell
-        self._tg = SpTaskGraph(trace=False).compute_on(self.engine)
-        self._state = SpData(
-            {"caches": self._caches, "tok": self._last_tok}, "serve_state"
-        )
+        self._force_rollback = 0
+        self.stream_errors = 0
         self.steps = 0
         self.prefills = 0
         self.restores = 0
@@ -310,6 +348,25 @@ class ServeEngine:
         self._decode, self._prefill = _jitted_steps(cfg)
         self._prefill_prime, self._install = _jitted_serve_ops(cfg, max_seq)
         self._sample_jit = _SAMPLE_JIT
+        # ONE persistent graph for the engine's lifetime; every iteration
+        # chains its codelets onto the same batch-state cell.  With a draft
+        # model the graph runs under SP_MODEL_2 so speculation rounds
+        # (spec.py) flow through the uncertain-writer chain machinery; the
+        # plain decode path is unaffected (its certain writes clear any
+        # uncertainty immediately).
+        spec_model = (
+            SpSpeculativeModel.SP_MODEL_2 if draft_cfg is not None
+            else SpSpeculativeModel.SP_NO_SPEC
+        )
+        self._tg = SpTaskGraph(spec_model, trace=False).compute_on(self.engine)
+        self._state = SpData(
+            {"caches": self._caches, "tok": self._last_tok}, "serve_state"
+        )
+        self._spec = None
+        if draft_cfg is not None:
+            from repro.serving.spec import SpecDecoder
+
+            self._spec = SpecDecoder(self, draft_cfg, draft_params, k=draft_k)
 
     # ------------------------------------------------------------------ API
 
@@ -322,13 +379,29 @@ class ServeEngine:
         top_k: int = 0,
         seed: int = 0,
         deadline: Optional[float] = None,
+        speculative: Optional[bool] = None,
+        on_token: Optional[callable] = None,
     ) -> Request:
         """Enqueue a request (thread-safe).  Raises AdmissionError when the
         bounded queue is full under the ``"reject"`` overload policy.
         ``deadline`` is *relative* seconds from now; past it the request is
-        shed (queued) or cancelled with its KV blocks freed (running)."""
+        shed (queued) or cancelled with its KV blocks freed (running).
+
+        ``speculative`` opts the request in/out of draft-model speculative
+        decoding; the default (None) opts in iff the engine has a draft
+        model.  Speculative and plain requests share one decode batch.
+        ``on_token`` is invoked with each *committed* token as it lands
+        (engine thread — it must be fast and must not raise; exceptions are
+        swallowed and counted in ``stream_errors``)."""
         if self.closed:
             raise RuntimeError("ServeEngine is closed")
+        if speculative is None:
+            speculative = self._spec is not None
+        elif speculative and self._spec is None:
+            raise ValueError(
+                "speculative=True needs an engine with a draft model "
+                "(ServeEngine(draft_cfg=, draft_params=))"
+            )
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) + max_new_tokens > self.max_seq:
             raise ValueError(
@@ -343,6 +416,8 @@ class ServeEngine:
             top_k=int(top_k),
             seed=int(seed),
             deadline=None if deadline is None else now + float(deadline),
+            speculative=bool(speculative),
+            on_token=on_token,
         )
         req.t_arrival = now
         self.scheduler.submit(req)
@@ -356,14 +431,36 @@ class ServeEngine:
         """One engine iteration: chain this iteration's codelets onto the
         persistent graph.  Decode/collect for the current batch go in first,
         then admissions — so a newly admitted request's prefill overlaps the
-        in-flight decode and its KV installs right after collect."""
+        in-flight decode and its KV installs right after collect.
+
+        When any running request opted into speculation (and the scheduler's
+        draft-depth policy allows it), the decode/collect pair is replaced by
+        one speculation round — k chained ``spec.draft`` uncertain writers,
+        one ``spec.verify`` speculated reader, one ``spec.commit`` — which
+        advances speculative slots by up to k+1 committed tokens while plain
+        slots ride along at one token per round.  Rounds force ``wait``:
+        round planning reads slot state the previous round must have
+        committed."""
+        spec_round = False
         with graph_scope(self._tg):
             if self._slot_req:
-                _decode_codelet(self._state, eng=self)
-                _collect_codelet(self._state, eng=self)
+                spec_slots = [
+                    s for s, r in self._slot_req.items() if r.speculative
+                ] if self._spec is not None else []
+                k = 0
+                if spec_slots:
+                    k = self.scheduler.draft_depth(len(spec_slots))
+                    if k <= 0:
+                        self._spec.sheds += 1  # pool pressure: plain decode
+                if spec_slots and k > 0:
+                    self._spec.insert_round(spec_slots, k)
+                    spec_round = True
+                else:
+                    _decode_codelet(self._state, eng=self)
+                    _collect_codelet(self._state, eng=self)
             for adm in self.scheduler.plan(pageable=self._pageable):
                 self._insert_admission(adm)
-        if wait:
+        if wait or spec_round:
             self._tg.wait_all_tasks()
         self.steps += 1
 
@@ -385,9 +482,13 @@ class ServeEngine:
             "cancels": self.cancels,
             "running": self.n_running,
             "pageable": self._pageable,
+            "stream_errors": self.stream_errors,
         }
         out.update(self.scheduler.stats())
         out["pool"] = self.pool.stats()
+        if self._spec is not None:
+            out["spec"] = self._spec.stats()
+            out["spec"]["graph"] = dict(self._tg.spec_stats)
         return out
 
     def close(self) -> None:
@@ -444,12 +545,33 @@ class ServeEngine:
             if blk.payload is None or blk.refcount <= 1:
                 blk.payload = extract_cache_rows(self._caches, slot, a, b)
 
+    def _emit_token(self, req: Request, tok: int) -> None:
+        """Fire the streaming callback for one committed token."""
+        if req.on_token is None:
+            return
+        try:
+            req.on_token(tok)
+        except Exception:
+            self.stream_errors += 1
+
+    def force_rollback(self, n: int = 1) -> None:
+        """Poison the next ``n`` speculation rounds: their draft chains
+        write the state cell, so the machinery rolls the verify back and
+        re-executes it as a plain decode.  Output is unchanged (that is the
+        point of the commit/rollback protocol); used by tests and chaos
+        schedules."""
+        if self._spec is None:
+            raise RuntimeError("engine has no draft model; nothing to roll back")
+        self._force_rollback += int(n)
+
     def _finish(self, slot: int) -> None:
         req = self._slot_req.pop(slot)
         req.done = True
         self._writeback(slot, req)
         self.pool.release(req.req_id, keep_resident=True)
         self.scheduler.free_slot(slot)
+        if self._spec is not None:
+            self._spec.drop_slot(slot)
 
     def _cancel_slot(self, slot: int, *, reason: Optional[str]) -> None:
         """Evict a running sequence whose output is no longer wanted
@@ -464,6 +586,8 @@ class ServeEngine:
         self.pool.release(req.req_id, keep_resident=False)
         self.scheduler.free_slot(slot)
         self.cancels += 1
+        if self._spec is not None:
+            self._spec.drop_slot(slot)
 
     def _preempt(self, slot: int) -> None:
         """Evict a running sequence: save its KV rows, release its blocks
@@ -474,6 +598,8 @@ class ServeEngine:
         self.scheduler.free_slot(slot)
         req.preemptions += 1
         self.scheduler.requeue(req)
+        if self._spec is not None:
+            self._spec.drop_slot(slot)
 
     def _preempt_for(self, needy_slot: int) -> bool:
         victim = self.scheduler.preemption_victim(self._slot_req, exclude=needy_slot)
@@ -486,7 +612,11 @@ class ServeEngine:
 
     def _sample_batch(self, logits: jax.Array) -> jax.Array:
         """Per-slot sampling: greedy unless the slot's request asks for
-        temperature/top-k, each with its own seeded, per-step-folded key."""
+        temperature/top-k, each with its own seeded key folded by the
+        *absolute sequence position* of the token being sampled — not the
+        engine step — so a position re-decoded after a speculation rollback
+        or a preemption resume resamples the identical token, and the
+        multi-position verify step can reproduce future positions' draws."""
         reqs = self._slot_req
         if all(r.temperature <= 0.0 for r in reqs.values()):
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -498,9 +628,9 @@ class ServeEngine:
             temps[slot] = r.temperature
             topks[slot] = r.top_k
             if r.temperature > 0.0:
-                keys[slot] = np.asarray(
-                    jax.random.fold_in(jax.random.PRNGKey(r.seed), len(r.out_tokens))
-                )
+                keys[slot] = np.asarray(jax.random.fold_in(
+                    jax.random.PRNGKey(r.seed), len(r.prompt) + len(r.out_tokens)
+                ))
         return self._sample_jit(
             logits, jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(keys)
         )
@@ -508,7 +638,9 @@ class ServeEngine:
     def _sample_one(self, req: Request, logits: jax.Array) -> int:
         if req.temperature <= 0.0:
             return int(jnp.argmax(logits))
-        key = jax.random.fold_in(jax.random.PRNGKey(req.seed), len(req.out_tokens))
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(req.seed), len(req.prompt) + len(req.out_tokens)
+        )
         tok = self._sample_jit(
             logits[None, :],
             jnp.asarray([req.temperature], jnp.float32),

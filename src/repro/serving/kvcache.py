@@ -104,10 +104,13 @@ class KVPagePool:
         self._partial_index: dict[Any, list[int]] = {}  # parent key -> ids
         self._ids = itertools.count()
         self._use = itertools.count(1)  # deterministic LRU clock
+        self._staged: dict[int, tuple] = {}  # seq -> (start, rows), uncommitted
         self.evictions = 0
         self.shared_hits = 0
         self.cow_copies = 0
         self.allocated_blocks = 0
+        self.staged_rounds = 0
+        self.staged_drops = 0
 
     # ------------------------------------------------------------- internals
 
@@ -247,12 +250,42 @@ class KVPagePool:
         table.n_tokens += 1
         return ev
 
+    # ---------------------------------------------------------------- staging
+    #
+    # Uncommitted payload rows for speculative decoding: a verify step parks
+    # the KV rows of *drafted* positions here; the commit path promotes the
+    # accepted prefix into block payloads and the rest is dropped.  Rows are
+    # opaque to the pool (same contract as ``KVBlock.payload``); at most one
+    # staged range per sequence — re-staging overwrites (a rolled-back verify
+    # re-runs and restages idempotently).
+
+    def stage_rows(self, seq_id: int, start: int, rows: Any) -> None:
+        """Park uncommitted KV rows for positions ``[start, start+len)``."""
+        if seq_id not in self._tables:
+            raise PageError(f"sequence {seq_id} not active; cannot stage rows")
+        self._staged[seq_id] = (int(start), rows)
+        self.staged_rounds += 1
+
+    def staged(self, seq_id: int) -> Optional[tuple]:
+        """Peek the staged ``(start, rows)`` for a sequence, if any."""
+        return self._staged.get(seq_id)
+
+    def take_staged(self, seq_id: int) -> Optional[tuple]:
+        """Pop and return the staged ``(start, rows)`` (commit path)."""
+        return self._staged.pop(seq_id, None)
+
+    def drop_staged(self, seq_id: int) -> None:
+        """Discard uncommitted rows (rollback / cancel / preemption)."""
+        if self._staged.pop(seq_id, None) is not None:
+            self.staged_drops += 1
+
     # --------------------------------------------------------------- release
 
     def release(self, seq_id: int, *, keep_resident: bool = True) -> None:
         """Drop the sequence's references.  ``keep_resident=True`` keeps the
         table resumable and the blocks cached (evictable once unreferenced);
         ``False`` frees unreferenced blocks immediately."""
+        self.drop_staged(seq_id)  # uncommitted rows never outlive the slot
         table = self._tables.pop(seq_id, None)
         if table is None:
             self._resident.pop(seq_id, None)
@@ -353,4 +386,6 @@ class KVPagePool:
             "shared_hits": self.shared_hits,
             "cow_copies": self.cow_copies,
             "evictions": self.evictions,
+            "staged_rounds": self.staged_rounds,
+            "staged_drops": self.staged_drops,
         }

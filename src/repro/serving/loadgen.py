@@ -22,6 +22,7 @@ delay before submission is precisely the cost being measured.
 """
 from __future__ import annotations
 
+import hashlib
 import time
 from dataclasses import dataclass, field
 from typing import Optional
@@ -45,6 +46,10 @@ class LoadSpec:
     dup_frac: float = 0.25  # fraction of requests reusing an earlier prompt
     temperature: float = 0.0
     top_k: int = 0
+    #: submit requests with speculative decoding (requires an engine built
+    #: with a draft model); committed output is bit-identical either way,
+    #: so spec-vs-plain runs of the same workload isolate the speedup
+    speculative: bool = False
 
 
 @dataclass
@@ -86,11 +91,12 @@ def warm_up(engine: ServeEngine, spec: LoadSpec) -> None:
     for L in spec.prompt_lens:
         prompt = np.full(L, spec.vocab + 1, np.int32)
         engine.submit(prompt, 2, temperature=spec.temperature,
-                      top_k=spec.top_k, seed=0)
+                      top_k=spec.top_k, seed=0, speculative=spec.speculative)
     engine.run_until_drained()
     # repeat one prompt so the restore (prefix-hit) path is warm too
     engine.submit(np.full(spec.prompt_lens[0], spec.vocab + 1, np.int32), 2,
-                  temperature=spec.temperature, top_k=spec.top_k, seed=0)
+                  temperature=spec.temperature, top_k=spec.top_k, seed=0,
+                  speculative=spec.speculative)
     engine.run_until_drained()
 
 
@@ -111,6 +117,7 @@ def run_load(
     sampling = dict(
         temperature=spec.temperature if spec else 0.0,
         top_k=spec.top_k if spec else 0,
+        speculative=spec.speculative if spec else None,
     )
     t0 = time.perf_counter()
     upcoming = list(workload)
@@ -157,7 +164,16 @@ def run_load(
     n_tokens = sum(len(r.out_tokens) for r in done)
     ttft = _percentiles_ms(ttfts)
     itl = _percentiles_ms(itls)
+    # order-independent fingerprint of committed output: two runs of the
+    # same workload (e.g. speculative vs plain greedy decode) must match
+    digest = hashlib.sha256(
+        repr(sorted(
+            (tuple(int(t) for t in r.prompt), tuple(r.out_tokens))
+            for r in done
+        )).encode()
+    ).hexdigest()[:16]
     return {
+        "output_checksum": digest,
         "mode": mode,
         "requests": len(done),
         "rejected": rejected,

@@ -81,13 +81,28 @@ class ServeScheduler:
         *,
         max_queue: int = 64,
         overload: str = "reject",
+        max_batch: Optional[int] = None,
+        admit_max_wait: float = 0.0,
+        draft_k: int = 0,
     ):
         if overload not in ("reject", "shed-oldest"):
             raise ValueError(f"unknown overload policy {overload!r}")
+        if max_batch is not None and not (1 <= max_batch <= n_slots):
+            raise ValueError(f"max_batch must be in [1, {n_slots}]")
         self.pool = pool
         self.n_slots = n_slots
         self.max_queue = max_queue
         self.overload = overload
+        #: cap on concurrently decoding sequences (None = all slots); lets a
+        #: deployment trade per-request latency against batch efficiency
+        self.max_batch = max_batch
+        #: hold admissions up to this many seconds so near-simultaneous
+        #: arrivals join the batch together (NeMo-style batching timeout);
+        #: 0.0 admits greedily
+        self.admit_max_wait = float(admit_max_wait)
+        #: speculative-decoding draft depth policy knob (0 = disabled);
+        #: :meth:`draft_depth` sheds speculation under pool pressure
+        self.draft_k = int(draft_k)
         self._waiting: collections.deque = collections.deque()
         self._free_slots: list[int] = list(range(n_slots))
         self._lock = threading.Lock()
@@ -184,6 +199,19 @@ class ServeScheduler:
                     keep.append(req)
             self._waiting = keep
             while self._waiting and self._free_slots:
+                running = self.n_slots - len(self._free_slots)
+                if self.max_batch is not None and running >= self.max_batch:
+                    break
+                if self.admit_max_wait > 0.0:
+                    # batching window: hold off while the batch could still
+                    # fill AND nobody has waited past the window
+                    capacity = len(self._free_slots)
+                    if self.max_batch is not None:
+                        capacity = min(capacity, self.max_batch - running)
+                    oldest = self._waiting[0]
+                    waited = now - (getattr(oldest, "t_arrival", None) or now)
+                    if waited < self.admit_max_wait and len(self._waiting) < capacity:
+                        break
                 req = self._waiting[0]
                 try:
                     mode = self._reserve(req, pageable)
@@ -222,6 +250,24 @@ class ServeScheduler:
         pool.allocate(req.req_id, prompt)
         return "prefill"
 
+    def draft_depth(self, n_spec: int = 1) -> int:
+        """Speculative draft depth for the next round: the configured
+        ``draft_k``, or 0 (speculation shed) when the pool lacks headroom
+        to absorb ``n_spec`` sequences each drafting k tokens — drafted
+        positions allocate blocks just like committed ones, and spending
+        the last free blocks on tokens that may be rolled back would force
+        preemptions of committed work.  Cheap enough to consult mid-chain:
+        a draft task re-checks between feeds and aborts its round if
+        admission pressure arrived after the round started."""
+        k = self.draft_k
+        if k <= 0 or n_spec <= 0:
+            return 0
+        bs = self.pool.block_size
+        need = n_spec * ((k + bs) // bs + 1)
+        if self.pool.n_free + self.pool.n_evictable < need:
+            return 0
+        return k
+
     def preemption_victim(self, running: dict, exclude: int | None = None):
         """(slot, req) to preempt: youngest admission first; None if only the
         excluded slot is running."""
@@ -237,6 +283,9 @@ class ServeScheduler:
             "queue_depth": self.queue_depth,
             "max_queue": self.max_queue,
             "overload": self.overload,
+            "max_batch": self.max_batch,
+            "admit_max_wait": self.admit_max_wait,
+            "draft_k": self.draft_k,
             "slot_occupancy": self.slot_occupancy,
             "admitted": self.admitted,
             "rejected": self.rejected,

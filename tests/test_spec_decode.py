@@ -1,0 +1,434 @@
+"""Speculative decoding subsystem (ISSUE 9): draft/verify/commit rounds on
+the serve engine's SP_MODEL_2 commit/rollback machinery.
+
+The load-bearing property everywhere: committed output is **bit-exact**
+with the non-speculative engine (and the sequential oracle) — for greedy
+and seeded sampling, across mixed spec/plain batches, mid-flight
+join/leave, forced rollback, and preemption — because commits only ever
+publish the target model's own sampled tokens.
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.timeout(300)
+
+from repro.configs import reduced_config
+from repro.models import decode_step, init_params, prefill
+from repro.runtime.serve import prime_cache
+from repro.serving import KVPagePool, PageError, ServeEngine, ServeScheduler, shrunken_draft
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = reduced_config("deepseek-7b").replace(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def garbage_draft(served):
+    """Same architecture, unrelated weights: proposals are mostly wrong."""
+    cfg, _ = served
+    return cfg, init_params(jax.random.PRNGKey(99), cfg)
+
+
+def _oracle(cfg, params, prompt, n, max_seq=48, temperature=0.0, seed=0):
+    """Prefill + sequential decode with the engine's sampling rule
+    (absolute-position-folded keys)."""
+    logits, caches = prefill(params, {"tokens": jnp.asarray(prompt[None, :])}, cfg)
+    caches = prime_cache(cfg, caches, len(prompt), max_seq)
+    out = []
+    lg = logits[0, -1]
+    pos = len(prompt)
+    while True:
+        if temperature == 0.0:
+            out.append(int(jnp.argmax(lg)))
+        else:
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(seed), len(prompt) + len(out)
+            )
+            out.append(int(jax.random.categorical(key, lg / temperature)))
+        if len(out) >= n:
+            return out
+        lg_all, caches = decode_step(
+            params, jnp.asarray([[out[-1]]], jnp.int32), caches, jnp.int32(pos), cfg
+        )
+        lg = lg_all[0, 0]
+        pos += 1
+
+
+def _prompts(cfg, lens, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size=L).astype(np.int32) for L in lens]
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness across draft qualities and batch mixes
+# ---------------------------------------------------------------------------
+
+def test_self_draft_bit_exact_mixed_batch(served):
+    """Draft == target: every proposal accepted, mixed spec/plain batch
+    matches the sequential oracle token for token."""
+    cfg, params = served
+    prompts = _prompts(cfg, (6, 9, 5, 7))
+    with ServeEngine(cfg, params, n_slots=3, max_seq=48, block_size=4,
+                     draft_cfg=cfg, draft_params=params, draft_k=3) as eng:
+        reqs = [eng.submit(p, 10, speculative=(i % 2 == 0))
+                for i, p in enumerate(prompts)]
+        eng.run_until_drained()
+        for p, r in zip(prompts, reqs):
+            assert r.out_tokens == _oracle(cfg, params, p, 10)
+        sp = eng.stats()["spec"]
+        assert sp["accept_rate"] == 1.0
+        assert sp["graph"]["commits"] > 0 and sp["graph"]["rollbacks"] == 0
+        # spec requests carry per-request round accounting
+        assert reqs[0].spec_rounds > 0
+        assert reqs[0].spec_accepted > 0
+        assert reqs[1].spec_rounds == 0  # plain rider
+
+
+def test_garbage_draft_still_bit_exact(served, garbage_draft):
+    """A draft that proposes junk costs speed, never correctness."""
+    cfg, params = served
+    _, gparams = garbage_draft
+    prompts = _prompts(cfg, (6, 9, 5), seed=7)
+    with ServeEngine(cfg, params, n_slots=3, max_seq=48, block_size=4,
+                     draft_cfg=cfg, draft_params=gparams, draft_k=3) as eng:
+        reqs = [eng.submit(p, 8, speculative=True) for p in prompts]
+        eng.run_until_drained()
+        for p, r in zip(prompts, reqs):
+            assert r.out_tokens == _oracle(cfg, params, p, 8)
+        sp = eng.stats()["spec"]
+        assert sp["accept_rate"] < 0.5  # junk proposals mostly rejected
+        # rejection never rolls the graph back — it is decided inside verify
+        assert sp["graph"]["rollbacks"] == 0
+
+
+def test_shrunken_draft_bit_exact(served):
+    cfg, params = served
+    dcfg, dparams = shrunken_draft(cfg, params, n_layers=1)
+    assert dcfg.n_layers == 1
+    prompts = _prompts(cfg, (6, 7), seed=11)
+    with ServeEngine(cfg, params, n_slots=2, max_seq=48, block_size=4,
+                     draft_cfg=dcfg, draft_params=dparams, draft_k=3) as eng:
+        reqs = [eng.submit(p, 8, speculative=True) for p in prompts]
+        eng.run_until_drained()
+        for p, r in zip(prompts, reqs):
+            assert r.out_tokens == _oracle(cfg, params, p, 8)
+
+
+def test_shrunken_draft_rejects_non_pageable():
+    cfg = reduced_config("mamba2-130m")
+    with pytest.raises(ValueError):
+        shrunken_draft(cfg, None, n_layers=1)
+
+
+def test_mid_flight_join_and_leave(served):
+    """Requests joining/finishing mid-round: spec slots keep decoding
+    bit-exact while the batch composition churns."""
+    cfg, params = served
+    prompts = _prompts(cfg, (6, 9, 5), seed=13)
+    with ServeEngine(cfg, params, n_slots=3, max_seq=64, block_size=4,
+                     draft_cfg=cfg, draft_params=params, draft_k=3) as eng:
+        a = eng.submit(prompts[0], 14, speculative=True)
+        b = eng.submit(prompts[1], 3, speculative=False)  # leaves early
+        for _ in range(2):
+            eng.step(wait=True)
+        c = eng.submit(prompts[2], 9, speculative=True)  # joins mid-flight
+        eng.run_until_drained()
+        assert a.out_tokens == _oracle(cfg, params, prompts[0], 14, max_seq=64)
+        assert b.out_tokens == _oracle(cfg, params, prompts[1], 3, max_seq=64)
+        assert c.out_tokens == _oracle(cfg, params, prompts[2], 9, max_seq=64)
+
+
+def test_forced_rollback_recovers_bit_exact(served):
+    """A poisoned round re-runs verify on the real state (SP_MODEL_2
+    rollback) and commits nothing speculative — output stays exact."""
+    cfg, params = served
+    prompts = _prompts(cfg, (6, 9), seed=17)
+    with ServeEngine(cfg, params, n_slots=2, max_seq=48, block_size=4,
+                     draft_cfg=cfg, draft_params=params, draft_k=3) as eng:
+        reqs = [eng.submit(p, 10, speculative=True) for p in prompts]
+        eng.step(wait=True)
+        eng.force_rollback(2)
+        eng.run_until_drained()
+        for p, r in zip(prompts, reqs):
+            assert r.out_tokens == _oracle(cfg, params, p, 10)
+        sp = eng.stats()["spec"]
+        assert sp["rollback_rounds"] == 2
+        assert sp["graph"]["rollbacks"] == 2
+        assert sp["graph"]["commits"] > 0
+
+
+def test_force_rollback_requires_draft(served):
+    cfg, params = served
+    with ServeEngine(cfg, params, n_slots=2, max_seq=32, block_size=4) as eng:
+        with pytest.raises(RuntimeError):
+            eng.force_rollback()
+
+
+def test_preemption_and_shed_under_pool_pressure(served):
+    """A pool too small for the batch forces preemptions and speculation
+    sheds mid-run; committed output still matches the oracle."""
+    cfg, params = served
+    prompts = _prompts(cfg, (6, 9, 5, 7, 8, 6), seed=19)
+    with ServeEngine(cfg, params, n_slots=4, max_seq=64, block_size=4,
+                     n_blocks=12, draft_cfg=cfg, draft_params=params,
+                     draft_k=4) as eng:
+        reqs = [eng.submit(p, 12, speculative=(i % 2 == 0))
+                for i, p in enumerate(prompts)]
+        eng.run_until_drained()
+        st = eng.stats()
+        assert st["preemptions"] > 0
+        assert st["spec"]["sheds"] > 0
+        for p, r in zip(prompts, reqs):
+            assert r.out_tokens == _oracle(cfg, params, p, 12, max_seq=64)
+
+
+def test_sampled_spec_matches_plain_and_oracle(served):
+    """Seeded sampling is bit-exact too: keys fold the absolute token
+    position, so verify sub-steps and plain decode draw identical keys."""
+    cfg, params = served
+    prompts = _prompts(cfg, (6, 9, 5), seed=23)
+    kw = dict(temperature=0.8, top_k=0)
+    with ServeEngine(cfg, params, n_slots=3, max_seq=48, block_size=4,
+                     draft_cfg=cfg, draft_params=params, draft_k=3) as eng:
+        reqs = [eng.submit(p, 8, seed=5 + i, speculative=True, **kw)
+                for i, p in enumerate(prompts)]
+        eng.run_until_drained()
+        spec_out = [r.out_tokens for r in reqs]
+    with ServeEngine(cfg, params, n_slots=3, max_seq=48, block_size=4) as eng:
+        reqs = [eng.submit(p, 8, seed=5 + i, **kw) for i, p in enumerate(prompts)]
+        eng.run_until_drained()
+        plain_out = [r.out_tokens for r in reqs]
+    assert spec_out == plain_out
+    for i, p in enumerate(prompts):
+        assert spec_out[i] == _oracle(cfg, params, p, 8,
+                                      temperature=0.8, seed=5 + i)
+
+
+def test_sampling_key_folds_position_not_step(served):
+    """Regression (satellite 3): a preempted-and-resumed sampled request
+    must reproduce the uninterrupted run.  Engine-step-folded keys would
+    resample resumed positions with different keys."""
+    cfg, params = served
+    prompts = _prompts(cfg, (6, 9, 5, 7, 8, 6), seed=29)
+    def run(n_blocks):
+        with ServeEngine(cfg, params, n_slots=3, max_seq=64, block_size=4,
+                         n_blocks=n_blocks) as eng:
+            reqs = [eng.submit(p, 10, temperature=0.7, seed=i)
+                    for i, p in enumerate(prompts)]
+            eng.run_until_drained()
+            return [r.out_tokens for r in reqs], eng.stats()["preemptions"]
+    roomy, _ = run(n_blocks=64)
+    tight, preempts = run(n_blocks=12)
+    assert preempts > 0, "pool must be tight enough to force preemption"
+    assert tight == roomy
+
+
+# ---------------------------------------------------------------------------
+# streaming (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_on_token_sees_only_committed_tokens(served):
+    cfg, params = served
+    [p] = _prompts(cfg, (6,), seed=31)
+    got = []
+    with ServeEngine(cfg, params, n_slots=2, max_seq=48, block_size=4,
+                     draft_cfg=cfg, draft_params=params, draft_k=3) as eng:
+        r = eng.submit(p, 10, speculative=True, on_token=got.append)
+        eng.run_until_drained()
+    assert got == r.out_tokens == _oracle(cfg, params, p, 10)
+
+
+def test_stream_iterator_from_consumer_thread(served):
+    cfg, params = served
+    [p] = _prompts(cfg, (7,), seed=37)
+    with ServeEngine(cfg, params, n_slots=2, max_seq=48, block_size=4,
+                     draft_cfg=cfg, draft_params=params, draft_k=3) as eng:
+        r = eng.submit(p, 10, speculative=True)
+        got = []
+        t = threading.Thread(target=lambda: got.extend(r.stream(timeout=120)))
+        t.start()
+        eng.run_until_drained()
+        t.join(timeout=120)
+        assert not t.is_alive()
+    assert got == r.out_tokens == _oracle(cfg, params, p, 10)
+
+
+def test_on_token_exception_counted_not_fatal(served):
+    cfg, params = served
+    [p] = _prompts(cfg, (6,), seed=41)
+    def boom(tok):
+        raise RuntimeError("consumer bug")
+    with ServeEngine(cfg, params, n_slots=1, max_seq=32, block_size=4) as eng:
+        r = eng.submit(p, 5, on_token=boom)
+        eng.run_until_drained()
+        assert r.done and len(r.out_tokens) == 5
+        assert eng.stats()["stream_errors"] == 5
+
+
+# ---------------------------------------------------------------------------
+# opt-in and configuration errors
+# ---------------------------------------------------------------------------
+
+def test_speculative_submit_requires_draft(served):
+    cfg, params = served
+    with ServeEngine(cfg, params, n_slots=1, max_seq=32, block_size=4) as eng:
+        with pytest.raises(ValueError):
+            eng.submit(np.arange(4, dtype=np.int32), 4, speculative=True)
+
+
+def test_draft_vocab_must_match(served):
+    cfg, params = served
+    bad = cfg.replace(vocab=cfg.vocab // 2)
+    bad_params = init_params(jax.random.PRNGKey(0), bad)
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, n_slots=1, max_seq=32, block_size=4,
+                    draft_cfg=bad, draft_params=bad_params, draft_k=2)
+
+
+# ---------------------------------------------------------------------------
+# scheduler knobs (satellite 2) and draft-depth policy
+# ---------------------------------------------------------------------------
+
+def test_max_batch_caps_running(served):
+    cfg, params = served
+    prompts = _prompts(cfg, (5, 6, 7, 8), seed=43)
+    with ServeEngine(cfg, params, n_slots=4, max_seq=32, block_size=4,
+                     max_batch=2) as eng:
+        reqs = [eng.submit(p, 4) for p in prompts]
+        peak = 0
+        while not all(r.done for r in reqs):
+            eng.step(wait=True)
+            peak = max(peak, eng.n_running)
+        assert peak <= 2
+        for p, r in zip(prompts, reqs):
+            assert r.out_tokens == _oracle(cfg, params, p, 4, max_seq=32)
+
+
+def test_max_batch_validation():
+    pool = KVPagePool(8, block_size=4)
+    with pytest.raises(ValueError):
+        ServeScheduler(pool, 4, max_batch=0)
+    with pytest.raises(ValueError):
+        ServeScheduler(pool, 4, max_batch=5)
+
+
+def test_admit_max_wait_batches_arrivals():
+    """Within the batching window a lone waiter is held back; it is
+    admitted once the window expires or the batch can fill."""
+    import time
+
+    pool = KVPagePool(32, block_size=4)
+    sched = ServeScheduler(pool, 4, admit_max_wait=10.0)
+
+    class R:
+        def __init__(self, rid):
+            self.req_id = rid
+            self.prompt = [1, 2, 3]
+            self.out_tokens = []
+            self.t_arrival = time.perf_counter()
+    r1 = R(1)
+    sched.submit(r1)
+    assert sched.plan(pageable=False) == []  # held: window open, batch not full
+    for i in range(2, 6):
+        sched.submit(R(i))
+    adm = sched.plan(pageable=False)  # queue ≥ capacity → admit now
+    assert len(adm) == 4
+    # expired window admits even a lone waiter
+    sched2 = ServeScheduler(pool, 2, admit_max_wait=0.01)
+    late = R(9)
+    late.t_arrival = time.perf_counter() - 1.0
+    sched2.submit(late)
+    assert len(sched2.plan(pageable=False)) == 1
+
+
+def test_draft_depth_sheds_under_pool_pressure():
+    pool = KVPagePool(4, block_size=4)
+    sched = ServeScheduler(pool, 2, draft_k=4)
+    assert sched.draft_depth(1) == 4  # headroom: full depth
+    pool.allocate(1, list(range(14)))  # pin nearly everything
+    assert sched.draft_depth(2) == 0  # no room for 2 slots' draft blocks
+    assert sched.draft_depth(0) == 0
+    assert ServeScheduler(pool, 2).draft_depth(1) == 0  # draft_k unset
+
+
+# ---------------------------------------------------------------------------
+# kvcache staging (uncommitted draft rows)
+# ---------------------------------------------------------------------------
+
+def test_pool_staged_rows_lifecycle():
+    pool = KVPagePool(8, block_size=4)
+    pool.allocate(1, [1, 2, 3])
+    pool.stage_rows(1, 3, {"k": np.ones(4)})
+    assert pool.staged(1) is not None
+    start, rows = pool.take_staged(1)
+    assert start == 3 and rows["k"].shape == (4,)
+    assert pool.staged(1) is None
+    # re-stage then release: rollback/teardown must not leak staged rows
+    pool.stage_rows(1, 3, {"k": np.zeros(4)})
+    pool.stage_rows(1, 5, {"k": np.ones(2)})  # overwrite is idempotent
+    assert pool.take_staged(1)[0] == 5
+    pool.stage_rows(1, 6, {"k": np.ones(1)})
+    pool.release(1, keep_resident=False)
+    assert pool.staged(1) is None
+    assert pool.stats()["staged_drops"] >= 1
+
+
+def test_pool_stage_rows_requires_active_seq():
+    pool = KVPagePool(8, block_size=4)
+    with pytest.raises(PageError):
+        pool.stage_rows(42, 0, {"k": np.ones(1)})
+
+
+def test_staged_rows_promoted_to_block_payloads(served):
+    """Blocks filled by committed speculative tokens get their KV payloads
+    from the staged verify rows — a later prefix-cache hit can restore
+    from them (pageable family)."""
+    cfg, params = served
+    [p] = _prompts(cfg, (5,), seed=47)
+    with ServeEngine(cfg, params, n_slots=2, max_seq=48, block_size=4,
+                     draft_cfg=cfg, draft_params=params, draft_k=3) as eng:
+        r = eng.submit(p, 11, speculative=True)
+        eng.run_until_drained()
+        assert eng.stats()["spec"]["staged_promotions"] > 0
+        # a repeat of the same prompt restores instead of re-prefilling
+        prefills_before = eng.stats()["prefills"]
+        r2 = eng.submit(p, 6, speculative=True)
+        eng.run_until_drained()
+        assert r2.out_tokens == r.out_tokens[:6]
+        assert eng.stats()["restores"] >= 1
+        assert eng.stats()["prefills"] == prefills_before
+
+
+# ---------------------------------------------------------------------------
+# loadgen integration (bench plumbing)
+# ---------------------------------------------------------------------------
+
+def test_run_load_speculative_checksum_matches_plain(served):
+    from repro.serving import LoadSpec, build_workload
+    from repro.serving.loadgen import run_load
+
+    cfg, params = served
+    spec = LoadSpec(seed=3, n_requests=4, rate_rps=500.0,
+                    prompt_lens=(5, 9), out_lens=(6,), vocab=32,
+                    dup_frac=0.0, speculative=True)
+    wl = build_workload(spec)
+    import dataclasses
+    with ServeEngine(cfg, params, n_slots=3, max_seq=48, block_size=4,
+                     draft_cfg=cfg, draft_params=params, draft_k=3) as eng:
+        res_spec = run_load(eng, wl, mode="continuous", spec=spec)
+    with ServeEngine(cfg, params, n_slots=3, max_seq=48, block_size=4) as eng:
+        res_plain = run_load(
+            eng, wl, mode="continuous",
+            spec=dataclasses.replace(spec, speculative=False),
+        )
+    assert res_spec["output_checksum"] == res_plain["output_checksum"]
+    assert res_spec["engine"]["spec"]["graph"]["commits"] > 0

@@ -170,3 +170,102 @@ def test_model2_overlaps_whole_chain(engine):
     t_m1 = run(SpSpeculativeModel.SP_MODEL_1)
     t_m2 = run(SpSpeculativeModel.SP_MODEL_2)
     assert t_m2 < t_m1 < t_none, (t_none, t_m1, t_m2)
+
+
+# ---------------------------------------------------------------------------
+# chained speculation through the @sp_task codelet frontend (ISSUE 9):
+# the draft/verify/commit shape speculative decoding uses
+# ---------------------------------------------------------------------------
+
+def _codelet_round(engine, poison: bool, k: int = 3):
+    """k maybe-write drafters → one speculated verifier → certain-write
+    commit, all declared as codelets.  Returns (state, log, stats)."""
+    from repro.core.api import graph_scope, sp_task
+
+    log = []
+
+    @sp_task(maybe=("state",), write=("prop",), name="draft")
+    def draft(state, prop, *, j, poison):
+        log.append(("draft", j))
+        if poison and j == 1:
+            state.value = state.value  # self-assignment still counts as a write
+        prop.value = j
+
+    @sp_task(read=("state", "prop"), write=("vout",), name="verify")
+    def verify(state, prop, vout):
+        log.append(("verify", state, prop))
+        vout.value = state * 10 + prop
+
+    @sp_task(write=("state",), read=("vout",), name="commit")
+    def commit(state, vout):
+        log.append(("commit", vout))
+        state.value = vout
+
+    tg = SpTaskGraph(SpSpeculativeModel.SP_MODEL_2).compute_on(engine)
+    state = SpData(7, "state")
+    prop = SpData(None, "prop")
+    vout = SpData(None, "vout")
+    with graph_scope(tg):
+        for j in range(k):
+            draft(state, prop, j=j, poison=poison)
+        verify(state, prop, vout)
+        commit(state, vout)
+    tg.wait_all_tasks()
+    return state.value, log, dict(tg.spec_stats)
+
+
+def test_codelet_chain_commit(engine):
+    """Clean chain: the verifier runs once (speculatively), its output is
+    committed, graph records one commit and no rollback."""
+    final, log, stats = _codelet_round(engine, poison=False)
+    assert final == 7 * 10 + 2  # last drafter's proposal, verified once
+    assert [e for e in log if e[0] == "verify"] == [("verify", 7, 2)]
+    assert stats["speculated"] == 1
+    assert stats["commits"] == 1 and stats["rollbacks"] == 0
+    assert [e for e in log if e[0] == "commit"] == [("commit", 72)]
+
+
+def test_codelet_chain_rollback_reexecutes_verifier(engine):
+    """A drafter that writes (even its own value back) invalidates the
+    chain's shared snapshot: the verifier's body runs twice — speculative
+    pass plus rollback re-execution on the real state — and commit sees
+    the re-executed output."""
+    final, log, stats = _codelet_round(engine, poison=True)
+    verifies = [e for e in log if e[0] == "verify"]
+    assert len(verifies) == 2
+    assert all(v == ("verify", 7, 2) for v in verifies)
+    assert stats["speculated"] == 1
+    assert stats["rollbacks"] == 1
+    assert final == 72
+    assert [e for e in log if e[0] == "commit"] == [("commit", 72)]
+
+
+def test_codelet_chain_equals_nospec(engine):
+    """SP_MODEL_2 through codelets is observably identical to SP_NO_SPEC
+    regardless of which drafters write."""
+    from repro.core.api import graph_scope, sp_task
+
+    def run(model, writes):
+        @sp_task(maybe=("x",), name="u")
+        def update(x, *, w, inc):
+            if w:
+                x.value = x.value + inc
+
+        @sp_task(read=("x",), write=("y",), name="r")
+        def reader(x, y):
+            y.value = y.value + x
+
+        tg = SpTaskGraph(model).compute_on(engine)
+        x = SpData(1.0, "x")
+        y = SpData(0.0, "y")
+        with graph_scope(tg):
+            for i, w in enumerate(writes):
+                update(x, w=w, inc=10.0 * (i + 1))
+                reader(x, y)
+        tg.wait_all_tasks()
+        return x.value, y.value
+
+    for writes in ([], [True], [False, True], [True, False, True], [False] * 3):
+        assert run(SpSpeculativeModel.SP_MODEL_2, writes) == run(
+            SpSpeculativeModel.SP_NO_SPEC, writes
+        )
