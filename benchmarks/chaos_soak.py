@@ -11,7 +11,12 @@ from __future__ import annotations
 
 import pytest
 
-from repro.dist.chaos import chaos_collectives, chaos_elastic, chaos_serve
+from repro.dist.chaos import (
+    chaos_collectives,
+    chaos_collectives_p2p,
+    chaos_elastic,
+    chaos_serve,
+)
 
 SEEDS = (0, 1, 2)
 ITERS = 20
@@ -21,6 +26,14 @@ ITERS = 20
 def test_soak_collectives(seed):
     stats = chaos_collectives(seed=seed, iters=ITERS)
     assert stats["escalations"] == 0
+    assert sum(stats["faults"].values()) > 0
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_soak_collectives_p2p(seed):
+    stats = chaos_collectives_p2p(seed=seed, iters=ITERS)
+    assert stats["escalations"] == 0
+    assert stats["links"] >= stats["size"]
     assert sum(stats["faults"].values()) > 0
 
 

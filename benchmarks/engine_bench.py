@@ -7,11 +7,14 @@ locality-aware work stealing), several team sizes:
   wall clock *is* the runtime: ``us_per_task`` here is the per-task
   dispatch overhead (insert → ready → pop → execute → release).  This is
   the number the CI smoke job gates on (>2× regression fails).  Measured
-  through **both frontends**: the positional ``tg.task(...)`` spelling
-  (``frontend="task"``) and the codelet ``@sp_task`` spelling
-  (``frontend="codelet"``), which additionally allocates the hidden result
-  cell + WRITE access behind ``TaskView.then`` — the ROADMAP's
-  "codelet-path dispatch cost" is this delta, now tracked per row.
+  through **three frontends**: the positional ``tg.task(...)`` spelling
+  (``frontend="task"``), the codelet ``@sp_task`` spelling
+  (``frontend="codelet"``) which additionally allocates the hidden result
+  cell + WRITE access behind ``TaskView.then``, and the fire-and-forget
+  codelet call (``frontend="codelet_noresult"``, ``result=False``) which
+  skips that cell — the ROADMAP's "codelet-path dispatch cost" is the
+  task↔codelet delta, and the noresult row shows how much of it the
+  ISSUE 10 opt-out claws back.
 * **scaling** — the ``engine_scaling.py`` protocol with data dependencies:
   ``n_chains = 2 × n_workers`` independent chains whose task bodies sleep a
   fixed duration (sleeps release the GIL, so worker threads genuinely
@@ -89,6 +92,10 @@ def run_chains(
                 for _step in range(chain_len):
                     for c in range(n_chains):
                         _codelet_step(cells[c], graph=tg)
+        elif frontend == "codelet_noresult":
+            for _step in range(chain_len):
+                for c in range(n_chains):
+                    _codelet_step(cells[c], graph=tg, result=False)
         else:
             body = (lambda ref: time.sleep(duration)) if duration > 0 else (lambda ref: None)
             for _step in range(chain_len):
@@ -140,7 +147,7 @@ def run_suite(smoke: bool = False) -> dict:
     dispatch = _measure_interleaved(
         [
             (name, w, 2 * w, chain_len, 0.0, fe)
-            for fe in ("task", "codelet")
+            for fe in ("task", "codelet", "codelet_noresult")
             for name in SCHEDULER_FACTORIES
             for w in (1, 4)
         ],

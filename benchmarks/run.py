@@ -23,6 +23,11 @@ Entries:
 * serving_spec_decode — speculative decoding (fitted 1-layer draft, k=4)
   vs plain decode on the same workload; the spec/plain speedup ratio is
   gated against the checked-in baseline alongside the throughput row
+* comm_allreduce_* — transport bandwidth-vs-message-size curve (router
+  baseline vs p2p vs chunk-pipelined p2p) over real OS ranks, persisted
+  to ``BENCH_comm.json`` when ``--comm-out`` is given; with
+  ``--comm-baseline``, exits non-zero on a >2× large-message p2p bus
+  bandwidth regression
 """
 from __future__ import annotations
 
@@ -71,6 +76,31 @@ def _engine_section(smoke: bool, out: str, baseline: str | None) -> None:
         with open(baseline) as f:
             base = json.load(f)
         failures = engine_bench.compare_against_baseline(payload, base)
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr, flush=True)
+        if failures:
+            sys.exit(1)
+
+
+def _comm_section(smoke: bool, out: str, baseline: str | None) -> None:
+    """Transport bandwidth curve (BENCH_comm.json) + CI regression gate:
+    large-message p2p rows must stay within 2× of the checked-in
+    baseline's bus bandwidth."""
+    from benchmarks import comm_bench
+
+    payload = comm_bench.run_suite(smoke=smoke)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    for r in payload["allreduce"]:
+        _row(
+            f"comm_allreduce_{r['mode']}_{r['ranks']}r_{r['bytes']}B",
+            r["wall_s"] * 1e6,
+            f"busbw_MBps={r['busbw_MBps']:.1f}",
+        )
+    if baseline and os.path.exists(baseline):
+        with open(baseline) as f:
+            base = json.load(f)
+        failures = comm_bench.compare_against_baseline(payload, base)
         for msg in failures:
             print(f"REGRESSION: {msg}", file=sys.stderr, flush=True)
         if failures:
@@ -134,6 +164,16 @@ def main() -> None:
         default=None,
         help="checked-in BENCH_serving.json to gate serving throughput against",
     )
+    ap.add_argument(
+        "--comm-out",
+        default=None,
+        help="transport bench JSON path (section skipped when unset)",
+    )
+    ap.add_argument(
+        "--comm-baseline",
+        default=None,
+        help="checked-in BENCH_comm.json to gate p2p bus bandwidth against",
+    )
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -142,6 +182,9 @@ def main() -> None:
     _engine_section(args.smoke, args.out, args.baseline)
     # ---- serving tier (BENCH_serving.json trajectory) ---------------------
     _serving_section(args.smoke, args.serving_out, args.serving_baseline)
+    # ---- transport data plane (BENCH_comm.json trajectory) ----------------
+    if args.comm_out:
+        _comm_section(args.smoke, args.comm_out, args.comm_baseline)
     if args.smoke:
         return
 

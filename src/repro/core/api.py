@@ -238,7 +238,7 @@ class SpCodelet:
 
     #: call-time keywords reserved for the runtime (never static params)
     RESERVED = (
-        "graph", "name", "priority", "cost",
+        "graph", "name", "priority", "cost", "result",
         "retries", "retry_backoff", "timeout", "on_failure",
     )
 
@@ -254,12 +254,14 @@ class SpCodelet:
         priority: int = 0,
         comm: bool = False,
         policy: SpTaskPolicy | None = None,
+        result: bool = True,
     ):
         self.name = name or getattr(fn, "__name__", "codelet")
         self.slots = list(slots)
         self.cost = cost
         self.priority = priority
         self.comm = comm
+        self.result = result  # declare-time default for the hidden result cell
         self.policy = policy  # default robustness policy for inserted tasks
         self.__doc__ = getattr(fn, "__doc__", None)
         self._static = set(static)
@@ -317,6 +319,7 @@ class SpCodelet:
         name = kwargs.pop("name", None) or self.name
         priority = kwargs.pop("priority", self.priority)
         cost = kwargs.pop("cost", self.cost)
+        want_result = bool(kwargs.pop("result", self.result))
         # per-call robustness overrides (ISSUE 8); default to the codelet's
         # declared policy
         policy = self.policy
@@ -384,17 +387,22 @@ class SpCodelet:
                     f"sequence of cells, got {type(val).__name__}. "
                     f"Wrap your value: x = SpData(value, {slot.name!r})."
                 )
-        result_cell = SpData(None, f"{name}.result")
-        res_acc = SpAccess(result_cell, AccessMode.WRITE)
-        accesses.append(res_acc)
-        arg_layout.append(("single", res_acc))
+        result_cell = None
+        if want_result:
+            # the hidden result cell .then()/.result() chaining hangs off;
+            # fire-and-forget calls (result=False) skip the cell, its WRITE
+            # access, and the per-call SpData allocation entirely
+            result_cell = SpData(None, f"{name}.result")
+            res_acc = SpAccess(result_cell, AccessMode.WRITE)
+            accesses.append(res_acc)
+            arg_layout.append(("single", res_acc))
 
         # -- capability dispatch: keep variants whose probe passes now -------
         impls: dict[str, Callable] = {}
         for kind, (fn, avail) in self._impls.items():
             if avail is not None and not avail():
                 continue
-            impls[kind] = _wrap_body(fn, static)
+            impls[kind] = _wrap_body(fn, static, with_result=want_result)
         if not impls:
             raise RuntimeError(
                 f"codelet {self.name!r}: no implementation available here "
@@ -426,12 +434,16 @@ class SpCodelet:
         return f"SpCodelet({self.name!r}, [{spec}], impls={self.impl_kinds})"
 
 
-def _wrap_body(fn: Callable, static: dict) -> Callable:
+def _wrap_body(fn: Callable, static: dict, *, with_result: bool = True) -> Callable:
     """Adapt a codelet body to the Task calling convention: the runtime
     appends a hidden result slot (written with the body's return value so
-    TaskView.then() chaining has a data-flow edge to hang off)."""
+    TaskView.then() chaining has a data-flow edge to hang off).  With
+    ``with_result=False`` there is no hidden slot — the body runs on the
+    user arguments alone (the fire-and-forget fast path)."""
     if static:
         fn = functools.partial(fn, **static)
+    if not with_result:
+        return fn  # no hidden slot to pop: the body is the task body
 
     def body(*task_args):
         *user_args, res_ref = task_args
@@ -454,6 +466,7 @@ def sp_task(
     cost: float = 1.0,
     priority: int = 0,
     comm: bool = False,
+    result: bool = True,
     retries: int = 0,
     retry_backoff: float = 0.0,
     timeout: float | None = None,
@@ -466,6 +479,14 @@ def sp_task(
     ``SpRead``/``SpWrite``/... become the slots.  All other parameters are
     static and supplied at call time.  ``comm=True`` marks every inserted
     task as a communication task (scheduling hint, see ``SpTaskGraph.task``).
+
+    ``result=False`` declares the codelet fire-and-forget (ISSUE 10 perf
+    satellite): calls skip the hidden result cell, its WRITE access, and
+    the return-value capture, shaving per-dispatch overhead for bodies
+    whose effect is entirely through their ``write=`` slots.  On such a
+    view ``.then()`` / ``.result()`` raise — chain off a written cell
+    instead.  Either default can be overridden per call:
+    ``codelet(x, y, result=False)``.
 
     Robustness policy (ISSUE 8): ``retries``/``retry_backoff`` re-run a
     raising body (exponential backoff between attempts), ``timeout`` arms
@@ -513,6 +534,7 @@ def sp_task(
             priority=priority,
             comm=comm,
             policy=policy,
+            result=result,
         )
 
     if fn is not None:  # bare @sp_task — annotation spelling

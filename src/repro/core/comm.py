@@ -7,7 +7,8 @@ starts non-blocking operations, polls them (MPI ``test``-style), and
 releases dependencies as soon as a request completes — "the progression is
 done as early as possible".
 
-Transport split (DESIGN.md §2, ROADMAP "Multi-host ChannelHub"):
+Transport architecture (ISSUE 10: the peer-to-peer data plane)
+==============================================================
 
 * :class:`SpTransport` is the wire abstraction: ``post(key, msg)`` /
   ``poll(key)`` mailboxes keyed by ``(src, dst, tag)``.  ``poll`` is
@@ -19,21 +20,93 @@ Transport split (DESIGN.md §2, ROADMAP "Multi-host ChannelHub"):
   locked deques.  Drained mailboxes are pruned on ``poll`` so per-step
   tags do not accumulate across a training run.
 
-* :class:`SocketTransport` is the cross-process TCP transport.  Rendezvous
-  is a localhost star: rank 0 binds the port and runs a frame router
-  (:class:`_Router`), every rank — including rank 0 — dials it and sends a
-  4-byte hello carrying its rank.  Messages are length-prefixed frames
-  ``[len][src][dst][taglen][tag][payload]``; the router forwards each frame
-  to ``dst``'s connection, and a per-transport receiver thread deposits
-  decoded messages into local mailboxes, so ``poll`` only ever inspects a
-  dict under a lock (no ``recv()`` on the poll path).
+* :class:`SocketTransport` is the cross-process TCP transport — a true
+  peer-to-peer data plane.  Payload bytes move over *direct* per-pair
+  connections; rank 0 is only special during rendezvous and as a
+  control-plane relay, never on the data path.
 
-Wire format: :func:`encode_message` / :func:`decode_message` are the single
-canonical encoding used whenever a message must leave the process — a typed,
-self-describing byte stream (``SpSerializer.append_obj``) covering arrays,
-scalars, strings/bytes, pytrees (tuple/list/dict), and tagged
-``sp_serialize`` / ``comm_buffer`` objects.  Classes cross the wire as
-*registered type names* (``register_wire_type``; auto-registered at pack
+Address-exchange rendezvous
+---------------------------
+Every rank — including rank 0 — binds its **own data listener** on an
+OS-assigned port, then dials rank 0's rendezvous socket (:class:`_Router`,
+demoted from the old frame switch to an address server) and sends an
+8-byte hello ``[u32 rank][u32 data_port]``.  Once all ``size`` hellos have
+landed, the router broadcasts the **address book** — ``(rank, ip,
+data_port)`` triples — to each rank over its rendezvous connection, which
+stays open afterwards as that rank's *control link*.  Data connections are
+dialed **lazily**: the first ``post`` to a peer dials its listener (a
+4-byte hello carries the dialer's rank), and the connection is cached in a
+per-peer link table for the life of the transport, so an N-rank job opens
+only the links its communication pattern actually uses.
+
+Frame wire format
+-----------------
+Every link — control or data — carries length-prefixed frames::
+
+    [u32 len][u32 src][u32 dst][u32 taglen][tag bytes][payload bytes]
+
+``tag`` is the canonical :func:`encode_message` spelling of the mailbox
+tag; ``dst == _CTRL_RANK`` marks control frames (heartbeats, byes, death
+gossip, the address book), whose tag tuple ``("__spctrl__", kind, ...)``
+carries the whole message.  Senders never concatenate payload bytes:
+:class:`SpSerializer` keeps a **scatter-gather segment list** (header
+``bytes`` interleaved with zero-copy ``memoryview`` s of large array
+buffers) and the transport hands the whole list to ``socket.sendmsg`` —
+writev-style vectored I/O, batched at ``IOV_MAX`` entries with partial
+sends resumed mid-segment (:func:`_sendv`).  Large tensors are *chunk
+pipelined* one level up: ``dist.collectives.ring_all_reduce(...,
+chunk_bytes=...)`` splits each ring step into fixed-size pieces that
+travel as independent frames, so step *k+1* of one piece overlaps the
+reduction of step *k* of another (transfer/compute overlap across the
+ring, paper §4.4's comm-as-tasks made load-bearing).
+
+Peer heartbeat / gossip contract
+--------------------------------
+Failure detection is **peer-observed**; no router sits on the data path
+to observe it for you:
+
+* Every transport's heartbeat thread sends ``hb`` control frames on *all*
+  of its live links — the control link (so the rank-0 relay can watch
+  ranks nobody has dialed) and every direct data link (so peers watch
+  each other).  Each transport runs its own staleness monitor over its
+  data links; the router runs one over the control links.
+* **EOF without a goodbye** on any link (a SIGKILLed process's kernel
+  closes its sockets) declares the peer dead at whichever endpoint saw it
+  — in milliseconds, independent of heartbeat knobs.  A refused direct
+  dial to a non-departed peer is the same signal.
+* A locally-declared death is **gossiped**: a ``("dead", rank)`` control
+  frame goes out on the control link and every data link; receivers mark
+  the rank dead and forward once (the dead-set makes gossip idempotent,
+  so storms terminate).  The router re-broadcasts to all control links,
+  guaranteeing delivery even to pairs that never dialed each other.
+  Graceful ``close()`` sends ``bye`` on every link first, and the router
+  relays byes, so planned departures are never declared deaths.
+
+Detection-latency knobs
+-----------------------
+``SocketTransport(heartbeat=interval, staleness_factor=k)`` declares a
+silent rank dead after ``interval * k`` seconds (default ``0.5 s × 20 =
+10 s``; ``REPRO_HB_INTERVAL`` overrides the interval fleet-wide, and
+``heartbeat_timeout=`` pins the window directly).  Smaller windows
+tighten elastic-recovery latency but risk false positives on loaded
+hosts — a declared-dead rank is permanently evicted (its dials and
+hellos are refused), so keep ``interval * k`` several times the worst
+GC/GIL pause you expect.  EOF detection needs no tuning and dominates in
+practice (SIGKILL → few ms, see ``BENCH_recovery.json``); heartbeats only
+bound detection of alive-but-wedged (SIGSTOP'd) ranks.  Per-request
+*recv* patience is a separate axis: ``timeout=`` on
+``mpi_recv``/``mpi_broadcast`` or ``SpCommGroup(default_timeout=...)``.
+
+:class:`RouterTransport` preserves the old hub-and-spoke star (every
+frame forwarded through rank 0) purely as the measured baseline for
+``benchmarks/comm_bench.py``; new code should never use it.
+
+Wire format payload encoding: :func:`encode_message` / :func:`decode_message`
+are the single canonical encoding used whenever a message must leave the
+process — a typed, self-describing byte stream (``SpSerializer.append_obj``)
+covering arrays, scalars, strings/bytes, pytrees (tuple/list/dict), and
+tagged ``sp_serialize`` / ``comm_buffer`` objects.  Classes cross the wire
+as *registered type names* (``register_wire_type``; auto-registered at pack
 time and resolved by import on the receiving side), never as pickled
 ``type`` objects.
 
@@ -46,49 +119,16 @@ exception* — observable via ``TaskView.exception()`` and re-raised by
 a grace period it aborts them with :class:`SpCommAbortedError` and reports
 the affected task names.
 
-Failure detection (ISSUE 6): a *dead rank* — a killed OS process — must
-surface in O(heartbeat), not after the full ``default_timeout``.  Two
-signals feed the detector on the :class:`SocketTransport` star:
-
-* **EOF / broken pipe** — the kernel closes a SIGKILLed process's sockets,
-  so the router's per-rank forward thread sees EOF almost immediately.  A
-  rank that hangs up *without* first sending the graceful ``bye`` control
-  frame (``close()`` sends one) is declared dead on the spot.
-* **Heartbeats** — every transport runs a small sender thread posting
-  ``hb`` control frames to the router; the router's monitor declares a rank
-  dead when its last heartbeat is older than ``heartbeat_timeout``.  This
-  catches ranks that are alive-but-wedged (SIGSTOP, GIL-hung) whose
-  sockets never close.
-
-Either way the router broadcasts a ``dead`` control frame to every
-survivor; each transport records the rank in its dead set
-(:meth:`SpTransport.mark_dead`).
-
-Detection-latency tradeoff (ISSUE 8): the heartbeat knobs are
-configurable — ``SocketTransport(heartbeat=interval,
-staleness_factor=k)`` declares a silent rank dead after ``interval * k``
-seconds (default ``0.5 s × 20 = 10 s``; the ``REPRO_HB_INTERVAL``
-environment variable overrides the interval fleet-wide).  A *smaller*
-interval detects wedged ranks faster and tightens elastic-recovery
-latency, but burns more control-plane frames through the rank-0 router
-(one ``hb`` per rank per interval) and — with a small staleness factor —
-risks false positives on a loaded host where a healthy rank's heartbeat
-thread is descheduled past the staleness window: a rank declared dead is
-*permanently* evicted (its reconnects are refused), so err on the side of
-``interval * k`` being several times the worst GC/GIL pause you expect.
-EOF detection (a SIGKILLed process's kernel-closed socket) is independent
-of these knobs and fires in milliseconds either way; heartbeats only
-bound detection of alive-but-wedged ranks.  Per-request *recv* patience
-is a different axis: pass ``timeout=`` to ``mpi_recv``/``mpi_broadcast``
-or set ``SpCommGroup(default_timeout=...)``.  From then on, ``post`` to the dead rank
-and ``poll`` of an empty mailbox whose source is dead raise
+Once a rank is dead (ISSUE 6 semantics, unchanged): ``post`` to it and
+``poll`` of an empty mailbox whose source is dead raise
 :class:`SpRankDeadError` — so every *pending* receive fails on its next
 comm-thread tick and every *future* request fails immediately, and
-dependent tasks cancel transitively exactly as timeouts do today.
+dependent tasks cancel transitively exactly as timeouts do.
 :class:`SpCommTransientError` marks retryable link faults (used by the
-fault-injection harness in ``repro.dist.fault``; retry/backoff lives
-there in ``RetryingTransport``).  All communication failures derive from
-:class:`SpCommError`, so callers can catch one type.
+fault-injection harness in ``repro.dist.fault``, which wraps per-peer
+streams; retry/backoff lives there in ``RetryingTransport``).  All
+communication failures derive from :class:`SpCommError`, so callers can
+catch one type.
 
 Note on access modes: the paper's prose says a send "does a write access"
 and a receive "performs a read access"; that is logically inverted (a recv
@@ -193,6 +233,10 @@ _U32 = struct.Struct("<I")
 _I64 = struct.Struct("<q")
 _F64 = struct.Struct("<d")
 
+# Arrays at or above this many bytes travel as zero-copy memoryview
+# segments; below it a tobytes() copy is cheaper than an extra iovec.
+_SEGMENT_MIN_BYTES = 1024
+
 
 class SpSerializer:
     """Packs values into one flat byte buffer — the paper's "single array
@@ -201,15 +245,28 @@ class SpSerializer:
     ``append_array`` / ``append_scalar`` write the legacy raw array frame
     (header + bytes), used by ``sp_serialize`` implementations.
     ``append_obj`` writes the typed, self-describing encoding used for
-    whole messages (:func:`encode_message`)."""
+    whole messages (:func:`encode_message`).
+
+    Scatter-gather: the serializer holds a *segment list*, not one
+    growing buffer.  Small fields are ``bytes``; array payloads at or
+    above ``_SEGMENT_MIN_BYTES`` stay as zero-copy ``memoryview`` s of
+    the source buffer (kept alive by the view).  :meth:`segments` hands
+    the list to vectored sends (``socket.sendmsg``); :meth:`buffer`
+    joins it for callers that need one contiguous ``bytes``."""
 
     def __init__(self):
-        self._chunks: list[bytes] = []
+        self._chunks: list[bytes | memoryview] = []
 
     def append_array(self, arr) -> None:
         a = np.asarray(arr)
+        if not a.flags["C_CONTIGUOUS"]:
+            a = np.ascontiguousarray(a)
         header = f"{a.dtype.str}|{','.join(map(str, a.shape))}|".encode()
-        self._chunks.append(len(header).to_bytes(4, "little") + header + a.tobytes())
+        self._chunks.append(len(header).to_bytes(4, "little") + header)
+        if a.nbytes >= _SEGMENT_MIN_BYTES:
+            self._chunks.append(memoryview(a).cast("B"))
+        else:
+            self._chunks.append(a.tobytes())
 
     def append_scalar(self, x) -> None:
         self.append_array(np.asarray(x))
@@ -281,16 +338,32 @@ class SpSerializer:
     def buffer(self) -> bytes:
         return b"".join(self._chunks)
 
+    def segments(self) -> list[bytes | memoryview]:
+        """The scatter-gather segment list, in wire order."""
+        return list(self._chunks)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(len(c) for c in self._chunks)
+
 
 class SpDeserializer:
-    def __init__(self, buf: bytes):
-        self._buf = buf
+    """Decodes a wire stream from ``bytes`` *or* any buffer (``bytearray``,
+    ``memoryview``) — the receive path hands in the recv buffer directly so
+    array payloads are sliced without an intermediate ``bytes`` copy."""
+
+    def __init__(self, buf):
+        self._buf = buf if isinstance(buf, (bytes, memoryview)) else memoryview(buf)
         self._pos = 0
 
-    def _take(self, n: int) -> bytes:
+    def _take_view(self, n: int):
+        """A zero-copy slice of the stream (bytes or memoryview)."""
         out = self._buf[self._pos : self._pos + n]
         self._pos += n
         return out
+
+    def _take(self, n: int) -> bytes:
+        return bytes(self._take_view(n))
 
     def _take_u32(self) -> int:
         return _U32.unpack(self._take(4))[0]
@@ -302,10 +375,15 @@ class SpDeserializer:
         shape = tuple(int(s) for s in shape_str.split(",") if s)
         dt = np.dtype(dtype_str)
         n = int(np.prod(shape, dtype=np.int64)) * dt.itemsize if shape else dt.itemsize
-        # .copy(): frombuffer views a read-only bytes object; consumers must
-        # be able to mutate received arrays in place
-        a = np.frombuffer(self._take(n), dtype=dt).reshape(shape).copy()
-        return a
+        a = np.frombuffer(self._take_view(n), dtype=dt)
+        if not a.flags.writeable:
+            # immutable source (a bytes frame): consumers must own mutable
+            # arrays, so pay for a private copy.  The p2p receive path
+            # hands us a per-frame *bytearray* nobody else holds — there
+            # frombuffer's writable view is already exclusively ours and
+            # the copy is skipped (zero-copy decode).
+            a = a.copy()
+        return a.reshape(shape)
 
     def next_obj(self) -> Any:
         code = self._take(1)
@@ -336,7 +414,7 @@ class SpDeserializer:
             return self.next_array()
         if code == b"O":
             name = self._take(self._take_u32()).decode()
-            inner = self._take(self._take_u32())
+            inner = self._take_view(self._take_u32())
             return resolve_wire_type(name).sp_deserialize(SpDeserializer(inner))
         if code == b"C":
             name = self._take(self._take_u32()).decode()
@@ -353,7 +431,19 @@ def encode_message(obj: Any) -> bytes:
     return s.buffer()
 
 
-def decode_message(buf: bytes) -> Any:
+def encode_segments(obj: Any) -> tuple[list[bytes | memoryview], int]:
+    """Scatter-gather encoding of one message: ``(segments, total_bytes)``.
+    Large array payloads stay zero-copy ``memoryview`` s of their source
+    buffers — valid until the next mutation of those arrays, so send
+    before releasing the message."""
+    s = SpSerializer()
+    s.append_obj(obj)
+    segs = s.segments()
+    return segs, sum(len(c) for c in segs)
+
+
+def decode_message(buf) -> Any:
+    """Decode one message from ``bytes`` or any readable buffer."""
     return SpDeserializer(buf).next_obj()
 
 
@@ -577,8 +667,838 @@ def _tag_bytes(tag: Any) -> bytes:
     return encode_message(tag)
 
 
+def _recv_into(sock: socket.socket, n: int) -> memoryview:
+    """Receive exactly ``n`` bytes into one fresh buffer (no per-chunk
+    joins).  The buffer is ``np.empty`` rather than ``bytearray(n)`` —
+    malloc without the memset: a ``bytearray`` zero-fills every frame
+    before ``recv_into`` overwrites it, a full extra pass over large
+    tensor payloads.  Returned as a writable memoryview so the zero-copy
+    decode path (``SpDeserializer``) can hand out views instead of
+    copies."""
+    buf = memoryview(np.empty(n, dtype=np.uint8)).cast("B")
+    got = 0
+    while got < n:
+        r = sock.recv_into(buf[got:])
+        if r == 0:
+            raise ConnectionError("peer closed the connection")
+        got += r
+    return buf
+
+
+# Linux's writev/sendmsg vector-count ceiling; longer segment lists are
+# sent in batches of this many iovecs.
+_IOV_MAX = 1024
+
+
+def _sendv(sock: socket.socket, segments: Sequence) -> None:
+    """Vectored (writev-style) send of a scatter-gather segment list via
+    ``socket.sendmsg`` — no join, no payload copy.  Handles partial sends
+    by resuming mid-segment and batches at :data:`_IOV_MAX` entries."""
+    views = [s if isinstance(s, memoryview) else memoryview(s) for s in segments]
+    if not hasattr(sock, "sendmsg"):  # pragma: no cover - non-POSIX fallback
+        sock.sendall(b"".join(views))
+        return
+    i = 0
+    while i < len(views):
+        n = sock.sendmsg(views[i : i + _IOV_MAX])
+        while n > 0:
+            first = views[i]
+            if n >= len(first):
+                n -= len(first)
+                i += 1
+            else:
+                views[i] = first[n:]
+                n = 0
+
+
+def _ctrl_frame(src: int, dst: int, tag_b: bytes) -> bytes:
+    body = _FRAME_HDR.pack(src, dst, len(tag_b)) + tag_b
+    return _U32.pack(len(body)) + body
+
+
+def _resolve_hb_knobs(
+    heartbeat: float | None,
+    staleness_factor: float | None,
+    heartbeat_interval: float | None,
+    heartbeat_timeout: float | None,
+) -> tuple[float, float]:
+    """Resolve the detection-latency knobs (ISSUE 8).  ``heartbeat`` is the
+    short spelling, ``heartbeat_interval`` the original one — passing both
+    is ambiguous.  Precedence: explicit kwarg > REPRO_HB_INTERVAL env >
+    0.5 s default.  The staleness window defaults to 20 heartbeats so the
+    historical 0.5 s → 10 s pairing is preserved; an explicit
+    ``heartbeat_timeout`` wins over ``staleness_factor``."""
+    if heartbeat is not None and heartbeat_interval is not None:
+        raise ValueError("pass heartbeat= or heartbeat_interval=, not both")
+    if heartbeat_timeout is not None and staleness_factor is not None:
+        raise ValueError("pass heartbeat_timeout= or staleness_factor=, not both")
+    interval = heartbeat if heartbeat is not None else heartbeat_interval
+    if interval is None:
+        env = os.environ.get("REPRO_HB_INTERVAL", "").strip()
+        interval = float(env) if env else 0.5
+    if interval <= 0.0:
+        raise ValueError(f"heartbeat interval must be > 0, got {interval}")
+    if heartbeat_timeout is None:
+        factor = 20.0 if staleness_factor is None else staleness_factor
+        if factor <= 1.0:
+            raise ValueError(f"staleness_factor must be > 1, got {factor}")
+        heartbeat_timeout = interval * factor
+    return interval, heartbeat_timeout
+
+
 class _Router(threading.Thread):
-    """Rank 0's frame switch *and* failure detector.
+    """Rank 0's *address-exchange* rendezvous and control-plane relay —
+    demoted from the old frame switch; it never touches payload bytes.
+
+    Accepts one connection per rank (hello = ``[u32 rank][u32
+    data_port]``), and once all ``size`` ranks are in, sends each the
+    address book — ``(rank, ip, data_port)`` triples, the ip observed on
+    the rendezvous connection — over that same connection, which then
+    stays open as the rank's *control link*.  Afterwards it only relays
+    control gossip: ``hb`` refreshes the sender's last-seen stamp (its
+    monitor declares staleness deaths for ranks nobody dialed), ``bye``
+    marks a graceful leave and is re-broadcast, and ``dead`` declarations
+    — local EOF, staleness, or peer-reported — are re-broadcast to every
+    control link so death news reaches pairs with no direct link."""
+
+    def __init__(self, host: str, port: int, size: int, *, heartbeat_timeout: float = 10.0):
+        super().__init__(name="sprendezvous", daemon=True)
+        self._size = size
+        self._hb_timeout = heartbeat_timeout
+        self._listener = socket.create_server((host, port), backlog=size)
+        self.port = self._listener.getsockname()[1]
+        self._conns: dict[int, socket.socket] = {}
+        self._send_locks: dict[int, threading.Lock] = {}
+        self._lock = threading.Lock()  # conns / ports / last_seen / dead / graceful
+        self._ports: dict[int, tuple[str, int]] = {}  # rank -> (ip, data_port)
+        self._all_in = threading.Event()
+        self._closing = False
+        self._last_seen: dict[int, float] = {}
+        self._graceful: set[int] = set()
+        self.dead: set[int] = set()
+        self._readers: list[threading.Thread] = []
+
+    def run(self) -> None:
+        try:
+            while not self._closing:
+                conn, addr = self._listener.accept()
+                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                rank, data_port = struct.unpack("<II", _recv_exact(conn, 8))
+                with self._lock:
+                    refuse = rank in self.dead or rank in self._conns
+                    if not refuse:
+                        self._conns[rank] = conn
+                        self._send_locks[rank] = threading.Lock()
+                        self._last_seen[rank] = time.monotonic()
+                        self._ports[rank] = (addr[0], data_port)
+                        n_in = len(self._conns)
+                if refuse:  # protocol breach: duplicate hello / dead rank
+                    warnings.warn(
+                        f"router: refusing hello for rank {rank} "
+                        "(duplicate or already declared dead)",
+                        RuntimeWarning,
+                    )
+                    conn.close()
+                    continue
+                if self._all_in.is_set():
+                    # late joiner (elastic rejoin): refresh everyone's book
+                    self._broadcast_book()
+                    self._start_reader(rank, conn)
+                elif n_in == self._size:
+                    self._all_in.set()
+                    self._broadcast_book()
+                    with self._lock:
+                        ready = list(self._conns.items())
+                    for r, c in ready:
+                        self._start_reader(r, c)
+                    threading.Thread(
+                        target=self._monitor, name="sprendezvous-hb", daemon=True
+                    ).start()
+        except (ConnectionError, OSError) as e:
+            if not self._closing and not self._all_in.is_set():
+                # a rank died mid-rendezvous: the job cannot form — fail
+                # loudly instead of leaving a half-dead router thread behind
+                warnings.warn(
+                    f"router: rendezvous failed ({e!r}); closing all connections",
+                    RuntimeWarning,
+                )
+                with self._lock:
+                    conns = list(self._conns.values())
+                for c in conns:
+                    c.close()
+        finally:
+            try:
+                self._listener.close()
+            except OSError:  # pragma: no cover - already closed
+                pass
+        for t in list(self._readers):
+            t.join()
+
+    def _start_reader(self, rank: int, conn: socket.socket) -> None:
+        t = threading.Thread(
+            target=self._ctrl_from, args=(rank, conn),
+            name=f"sprendz-{rank}", daemon=True,
+        )
+        self._readers.append(t)
+        t.start()
+
+    def soft_close(self) -> None:
+        """Stop accepting and monitoring; control links stay up until each
+        peer hangs up (rank 0 may finish first)."""
+        self._closing = True
+        try:
+            self._listener.close()
+        except OSError:  # pragma: no cover - already closed
+            pass
+
+    # -- control plane -------------------------------------------------------
+
+    def _broadcast_book(self) -> None:
+        with self._lock:
+            book = [[r, ip, p] for r, (ip, p) in sorted(self._ports.items())]
+            targets = [
+                (r, self._conns[r], self._send_locks[r]) for r in self._conns
+            ]
+        tag_b = encode_message(("__spctrl__", "book", book))
+        for r, c, lk in targets:
+            try:
+                with lk:
+                    c.sendall(_ctrl_frame(_CTRL_RANK, r, tag_b))
+            except OSError:  # pragma: no cover - peer already gone
+                pass
+
+    def _broadcast_ctrl(self, ctrl: tuple) -> None:
+        with self._lock:
+            targets = [
+                (r, self._conns[r], self._send_locks[r]) for r in self._conns
+            ]
+        tag_b = encode_message(ctrl)
+        for r, c, lk in targets:
+            try:
+                with lk:
+                    c.sendall(_ctrl_frame(_CTRL_RANK, r, tag_b))
+            except OSError:  # pragma: no cover - survivor also going away
+                pass
+
+    def _ctrl_from(self, rank: int, conn: socket.socket) -> None:
+        try:
+            while True:
+                (n,) = _U32.unpack(_recv_exact(conn, 4))
+                body = _recv_exact(conn, n)
+                _src, dst, taglen = _FRAME_HDR.unpack_from(body, 0)
+                if dst != _CTRL_RANK:
+                    continue  # no data forwarding on the control plane
+                off = _FRAME_HDR.size
+                ctrl = decode_message(body[off : off + taglen])
+                kind = ctrl[1]
+                if kind == "hb":
+                    with self._lock:
+                        self._last_seen[rank] = time.monotonic()
+                elif kind == "bye":
+                    with self._lock:
+                        self._graceful.add(rank)
+                    self._broadcast_ctrl(("__spctrl__", "bye", rank))
+                elif kind == "dead":
+                    self._declare_dead(
+                        int(ctrl[2]), f"reported dead by rank {rank}"
+                    )
+        except (ConnectionError, OSError):
+            pass  # rank hung up
+        finally:
+            with self._lock:
+                graceful = rank in self._graceful
+                current = self._conns.get(rank) is conn
+                if current:
+                    del self._conns[rank]
+                    self._send_locks.pop(rank, None)
+            try:
+                conn.close()
+            except OSError:  # pragma: no cover - already closed
+                pass
+            if current and not graceful and not self._closing:
+                # EOF without a goodbye: the process died under us
+                self._declare_dead(rank, "connection lost without goodbye")
+
+    # -- failure detector ----------------------------------------------------
+
+    def _monitor(self) -> None:
+        interval = max(self._hb_timeout / 4.0, 0.02)
+        while not self._closing:
+            time.sleep(interval)
+            now = time.monotonic()
+            with self._lock:
+                stale = [
+                    r
+                    for r, seen in self._last_seen.items()
+                    if r in self._conns
+                    and r not in self._graceful
+                    and r not in self.dead
+                    and now - seen > self._hb_timeout
+                ]
+            for r in stale:
+                self._declare_dead(
+                    r, f"no heartbeat for more than {self._hb_timeout}s"
+                )
+
+    def _declare_dead(self, rank: int, why: str) -> None:
+        with self._lock:
+            if rank in self.dead:
+                return
+            self.dead.add(rank)
+            conn = self._conns.pop(rank, None)
+            self._send_locks.pop(rank, None)
+        if conn is not None:
+            try:
+                conn.close()
+            except OSError:  # pragma: no cover - already closed
+                pass
+        warnings.warn(
+            f"router: declaring rank {rank} dead ({why})", RuntimeWarning
+        )
+        self._broadcast_ctrl(("__spctrl__", "dead", rank))
+
+
+class _PeerLink:
+    """One cached direct connection to a peer: socket, write lock, and the
+    reader thread draining it into the local mailboxes."""
+
+    __slots__ = ("rank", "sock", "wlock", "reader")
+
+    def __init__(self, rank: int, sock: socket.socket):
+        self.rank = rank
+        self.sock = sock
+        self.wlock = threading.Lock()
+        self.reader: Optional[threading.Thread] = None
+
+
+class SocketTransport(_LockedMailboxes):
+    """Cross-process TCP transport — the peer-to-peer data plane.
+
+    Rendezvous is address-exchange only (see the module docstring): every
+    rank binds its own data listener, rank 0's :class:`_Router` hands out
+    the address book, and ``post`` lazily dials the destination's listener
+    and caches the connection.  Frames are written with vectored I/O from
+    the serializer's scatter-gather segment list; a reader thread per link
+    drains frames into local mailboxes, so ``poll`` is a pure dict lookup
+    — non-blocking, as the comm thread's test loop requires.  Failure
+    detection is peer-observed (EOF / heartbeat staleness on each link)
+    with death gossip relayed over the control plane."""
+
+    def __init__(
+        self,
+        rank: int,
+        size: int,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        connect_timeout: float = 10.0,
+        max_dial_retries: int = 100,
+        heartbeat: float | None = None,
+        staleness_factor: float | None = None,
+        heartbeat_interval: float | None = None,
+        heartbeat_timeout: float | None = None,
+    ):
+        super().__init__()
+        interval, hb_timeout = _resolve_hb_knobs(
+            heartbeat, staleness_factor, heartbeat_interval, heartbeat_timeout
+        )
+        self.rank, self.size, self.host = rank, size, host
+        self._received = 0
+        self._closed = False
+        self._connect_timeout = connect_timeout
+        self._hb_interval = interval
+        self._hb_timeout = hb_timeout
+        self._router: Optional[_Router] = None
+        if rank == 0:
+            self._router = _Router(host, port, size, heartbeat_timeout=hb_timeout)
+            self._router.start()
+            port = self._router.port
+        elif port == 0:
+            raise ValueError("non-root ranks must be told the rendezvous port")
+        self.port = port
+
+        # the p2p plane: every rank is a server for its peers
+        self._listener = socket.create_server((host, 0), backlog=max(size, 8))
+        self.data_port = self._listener.getsockname()[1]
+
+        # the rendezvous may not be listening yet — dial with a bounded
+        # retry count and exponential backoff
+        deadline = time.monotonic() + connect_timeout
+        delay, attempts = 0.01, 0
+        while True:
+            try:
+                self._sock = socket.create_connection((host, port), timeout=connect_timeout)
+                break
+            except OSError as e:
+                attempts += 1
+                if attempts >= max_dial_retries or time.monotonic() + delay > deadline:
+                    self._listener.close()
+                    raise SpCommError(
+                        f"rank {rank}: rendezvous at {host}:{port} unreachable "
+                        f"after {attempts} dial attempts over "
+                        f"{connect_timeout}s ({e})"
+                    ) from e
+                time.sleep(delay)
+                delay = min(delay * 2.0, 0.5)
+        # create_connection leaves connect_timeout armed on the socket;
+        # clear it or an idle gap longer than that kills the reader thread
+        self._sock.settimeout(None)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._sock.sendall(struct.pack("<II", rank, self.data_port))  # hello
+
+        self._wlock = threading.Lock()  # control-link writes
+        self._plock = threading.RLock()  # links / book / graceful / last_seen
+        self._links: dict[int, _PeerLink] = {}
+        self._extra_links: list[_PeerLink] = []  # simultaneous-dial duplicates
+        self._dial_locks: dict[int, threading.Lock] = {}
+        self._dials = 0
+        self._graceful: set[int] = set()
+        self._last_seen: dict[int, float] = {}
+        self._book: dict[int, tuple[str, int]] = {}
+        self._book_ready = threading.Event()
+        self._book_failed: Optional[str] = None
+        self._hb_stop = threading.Event()
+
+        self._reader = threading.Thread(
+            target=self._ctrl_loop, name=f"sprecv-{rank}", daemon=True
+        )
+        self._reader.start()
+        self._acceptor = threading.Thread(
+            target=self._accept_loop, name=f"spaccept-{rank}", daemon=True
+        )
+        self._acceptor.start()
+        self._hb = threading.Thread(
+            target=self._hb_loop, name=f"sphb-{rank}", daemon=True
+        )
+        self._hb.start()
+        self._mon = threading.Thread(
+            target=self._monitor_loop, name=f"spmon-{rank}", daemon=True
+        )
+        self._mon.start()
+
+    # -- control link (rank-0 relay) -----------------------------------------
+
+    def _ctrl_loop(self) -> None:
+        try:
+            while True:
+                (n,) = _U32.unpack(_recv_exact(self._sock, 4))
+                body = _recv_exact(self._sock, n)
+                src, dst, taglen = _FRAME_HDR.unpack_from(body, 0)
+                if dst != _CTRL_RANK and src != _CTRL_RANK:
+                    continue  # the control link carries no data frames
+                off = _FRAME_HDR.size
+                ctrl = decode_message(body[off : off + taglen])
+                kind = ctrl[1]
+                if kind == "book":
+                    with self._plock:
+                        self._book = {
+                            int(r): (ip, int(p)) for r, ip, p in ctrl[2]
+                        }
+                    self._book_ready.set()
+                elif kind == "dead":
+                    self._death_news(int(ctrl[2]))
+                elif kind == "bye":
+                    with self._plock:
+                        self._graceful.add(int(ctrl[2]))
+        except (ConnectionError, OSError):
+            if self._closed:
+                return
+            # the rendezvous relay (rank 0's process) hung up.  Unlike the
+            # old star this does NOT kill the data plane — direct links
+            # keep flowing; only rank 0 itself may be gone.
+            if not self._book_ready.is_set():
+                self._book_failed = (
+                    "control link lost before the address book arrived"
+                )
+                self._book_ready.set()
+            with self._plock:
+                graceful = 0 in self._graceful
+            if self.rank != 0 and not graceful:
+                self._declare_peer_dead(0, "control link lost without goodbye")
+
+    # -- data plane: listener + per-peer links -------------------------------
+
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                conn, _addr = self._listener.accept()
+            except OSError:
+                return  # listener closed: transport shutting down
+            if self._closed:
+                conn.close()
+                return
+            try:
+                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                (peer,) = _U32.unpack(_recv_exact(conn, 4))  # link hello
+            except (ConnectionError, OSError):
+                conn.close()
+                continue
+            if self.is_dead(peer):
+                conn.close()  # evicted rank: refuse the hello
+                continue
+            self._register_link(_PeerLink(peer, conn))
+
+    def _register_link(self, link: _PeerLink) -> _PeerLink:
+        """Cache ``link`` (or park it as a duplicate when both sides dialed
+        simultaneously) and start its reader.  Returns the canonical link
+        for that peer."""
+        with self._plock:
+            if self._closed:
+                link.sock.close()
+                return link
+            current = self._links.get(link.rank)
+            if current is None:
+                self._links[link.rank] = link
+            else:
+                self._extra_links.append(link)
+            self._last_seen[link.rank] = time.monotonic()
+        link.reader = threading.Thread(
+            target=self._link_loop, args=(link,),
+            name=f"splink-{self.rank}-{link.rank}", daemon=True,
+        )
+        link.reader.start()
+        return current if current is not None else link
+
+    def _drop_link(self, link: _PeerLink) -> None:
+        with self._plock:
+            if self._links.get(link.rank) is link:
+                del self._links[link.rank]
+            elif link in self._extra_links:
+                self._extra_links.remove(link)
+        try:
+            link.sock.close()
+        except OSError:  # pragma: no cover - already closed
+            pass
+
+    def _link_loop(self, link: _PeerLink) -> None:
+        peer = link.rank
+        try:
+            while True:
+                (n,) = _U32.unpack(_recv_exact(link.sock, 4))
+                body = _recv_into(link.sock, n)
+                src, dst, taglen = _FRAME_HDR.unpack_from(body, 0)
+                off = _FRAME_HDR.size
+                tag_b = bytes(body[off : off + taglen])
+                if dst == _CTRL_RANK:  # peer-to-peer control gossip
+                    ctrl = decode_message(tag_b)
+                    kind = ctrl[1]
+                    if kind == "hb":
+                        with self._plock:
+                            self._last_seen[peer] = time.monotonic()
+                    elif kind == "bye":
+                        with self._plock:
+                            self._graceful.add(
+                                int(ctrl[2]) if len(ctrl) > 2 else peer
+                            )
+                    elif kind == "dead":
+                        self._death_news(int(ctrl[2]))
+                    continue
+                msg = decode_message(memoryview(body)[off + taglen :])
+                self._deposit((src, self.rank, tag_b), msg, "_received")
+        except (ConnectionError, OSError):
+            pass
+        finally:
+            self._drop_link(link)
+            if not self._closed:
+                with self._plock:
+                    graceful = peer in self._graceful
+                if not graceful and not self.is_dead(peer):
+                    # EOF without a goodbye, observed by the peer itself —
+                    # no router in the detection path
+                    self._declare_peer_dead(
+                        peer, "peer connection lost without goodbye"
+                    )
+
+    # -- failure detection: peer-observed, gossiped --------------------------
+
+    def _declare_peer_dead(self, rank: int, why: str) -> None:
+        if rank == self.rank or self._closed or self.is_dead(rank):
+            return
+        warnings.warn(
+            f"rank {self.rank}: declaring rank {rank} dead ({why})",
+            RuntimeWarning,
+        )
+        self._death_news(rank)
+
+    def _death_news(self, rank: int) -> None:
+        """Mark ``rank`` dead, reap its links, and gossip once — the dead
+        set dedups re-deliveries, so gossip storms terminate."""
+        if rank == self.rank:
+            return  # never suicide on relayed gossip
+        with self._lock:
+            if rank in self._dead:
+                return
+        self.mark_dead(rank)
+        with self._plock:
+            link = self._links.pop(rank, None)
+            extras = [l for l in self._extra_links if l.rank == rank]
+            self._extra_links = [l for l in self._extra_links if l.rank != rank]
+        for l in ([link] if link is not None else []) + extras:
+            try:
+                l.sock.close()
+            except OSError:  # pragma: no cover - already closed
+                pass
+        self._gossip(encode_message(("__spctrl__", "dead", rank)))
+
+    def _gossip(self, tag_b: bytes) -> None:
+        frame = _ctrl_frame(self.rank, _CTRL_RANK, tag_b)
+        try:
+            with self._wlock:
+                self._sock.sendall(frame)  # the relay re-broadcasts
+        except OSError:
+            pass  # control link gone; data links below still carry the news
+        with self._plock:
+            links = list(self._links.values())
+        for link in links:
+            try:
+                with link.wlock:
+                    link.sock.sendall(frame)
+            except OSError:
+                pass  # that link's reader handles its own fallout
+
+    def _hb_loop(self) -> None:
+        tag_b = encode_message(("__spctrl__", "hb"))
+        frame = _ctrl_frame(self.rank, _CTRL_RANK, tag_b)
+        while not self._hb_stop.wait(self._hb_interval):
+            try:
+                with self._wlock:
+                    self._sock.sendall(frame)
+            except OSError:
+                pass  # relay gone; direct links still prove liveness
+            with self._plock:
+                links = list(self._links.values())
+            for link in links:
+                try:
+                    with link.wlock:
+                        link.sock.sendall(frame)
+                except OSError:
+                    pass
+
+    def _monitor_loop(self) -> None:
+        interval = max(self._hb_timeout / 4.0, 0.02)
+        while not self._hb_stop.wait(interval):
+            now = time.monotonic()
+            with self._plock:
+                stale = [
+                    r
+                    for r, seen in self._last_seen.items()
+                    if r in self._links
+                    and r not in self._graceful
+                    and now - seen > self._hb_timeout
+                ]
+            for r in stale:
+                self._declare_peer_dead(
+                    r, f"no heartbeat for more than {self._hb_timeout}s"
+                )
+
+    # -- lazy dial + connection cache ----------------------------------------
+
+    def _dial_lock(self, dst: int) -> threading.Lock:
+        with self._plock:
+            lock = self._dial_locks.get(dst)
+            if lock is None:
+                lock = self._dial_locks[dst] = threading.Lock()
+            return lock
+
+    def _require_book(self) -> dict[int, tuple[str, int]]:
+        if not self._book_ready.wait(self._connect_timeout):
+            raise SpCommError(
+                f"rank {self.rank}: address book not received within "
+                f"{self._connect_timeout}s (rendezvous incomplete?)"
+            )
+        if self._book_failed is not None:
+            raise SpCommError(f"rank {self.rank}: {self._book_failed}")
+        with self._plock:
+            return dict(self._book)
+
+    def _get_link(self, dst: int) -> Optional[_PeerLink]:
+        with self._plock:
+            link = self._links.get(dst)
+        if link is not None:
+            return link
+        book = self._require_book()
+        with self._plock:
+            if dst in self._graceful:
+                return None  # departed peer: frames to it are dropped
+        with self._dial_lock(dst):
+            with self._plock:
+                link = self._links.get(dst)
+            if link is not None:
+                return link  # raced with the peer dialing us
+            addr = book.get(dst)
+            if addr is None:
+                raise SpCommError(
+                    f"rank {self.rank}: no address for rank {dst} in the book"
+                )
+            last: Optional[OSError] = None
+            sock = None
+            for attempt in range(3):
+                if self.is_dead(dst):
+                    raise SpRankDeadError(
+                        f"cannot send to rank {dst}: rank is dead"
+                    )
+                try:
+                    sock = socket.create_connection(
+                        addr, timeout=self._connect_timeout
+                    )
+                    break
+                except OSError as e:
+                    last = e
+                    with self._plock:
+                        if dst in self._graceful:
+                            return None
+                    time.sleep(0.02 * (attempt + 1))
+            if sock is None:
+                # a refused direct dial to a non-departed peer is EOF-grade
+                # evidence: its listener died with its process
+                self._declare_peer_dead(
+                    dst, f"direct dial to {addr[0]}:{addr[1]} failed ({last})"
+                )
+                raise SpRankDeadError(
+                    f"cannot send to rank {dst}: rank is dead "
+                    f"(direct dial failed: {last})"
+                )
+            sock.settimeout(None)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            sock.sendall(_U32.pack(self.rank))  # link hello
+            with self._plock:
+                self._dials += 1
+            return self._register_link(_PeerLink(dst, sock))
+
+    # -- mailbox side ---------------------------------------------------------
+
+    def _box_key(self, key: tuple) -> tuple:
+        src, dst, tag = key
+        return (src, dst, _tag_bytes(tag))
+
+    def _post_segments(self, key: tuple, segments: list, nbytes: int) -> None:
+        src, dst, tag = key
+        if self._closed:
+            raise SpCommError("transport is closed")
+        if self.is_dead(dst):
+            raise SpRankDeadError(f"cannot send to rank {dst}: rank is dead")
+        tag_b = _tag_bytes(tag)
+        head = (
+            _U32.pack(_FRAME_HDR.size + len(tag_b) + nbytes)
+            + _FRAME_HDR.pack(src, dst, len(tag_b))
+            + tag_b
+        )
+        link = self._get_link(dst)
+        if link is None:
+            return  # departed peer: dropped, like the star router did
+        try:
+            with link.wlock:
+                _sendv(link.sock, [head, *segments])
+        except OSError as e:
+            with self._plock:
+                graceful = dst in self._graceful
+            if graceful or self._closed:
+                return
+            self._declare_peer_dead(dst, f"send failed ({e})")
+            raise SpRankDeadError(
+                f"cannot send to rank {dst}: rank is dead (send failed: {e})"
+            ) from e
+        with self._lock:
+            self._posted += 1
+
+    def post(self, key: tuple, msg: Any) -> None:
+        src, dst, tag = key
+        if dst == self.rank:
+            # self-delivery: straight into the local mailbox (rule 1)
+            if self._closed:
+                raise SpCommError("transport is closed")
+            with self._lock:
+                self._posted += 1
+            self._deposit(self._box_key(key), msg, "_received")
+            return
+        segs, nbytes = encode_segments(msg)
+        self._post_segments(key, segs, nbytes)
+
+    def post_all(self, keys: list, msg: Any) -> None:
+        # broadcast fan-out: serialize once, one vectored frame per link
+        segs: Optional[list] = None
+        nbytes = 0
+        for key in keys:
+            if key[1] == self.rank:
+                self.post(key, msg)
+                continue
+            if segs is None:
+                segs, nbytes = encode_segments(msg)
+            self._post_segments(key, segs, nbytes)
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out["received"] = self._received
+        with self._plock:
+            out["links"] = len(self._links) + len(self._extra_links)
+            out["dials"] = self._dials
+        return out
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._hb_stop.set()
+        bye = _ctrl_frame(
+            self.rank, _CTRL_RANK, encode_message(("__spctrl__", "bye"))
+        )
+        with self._plock:
+            links = list(self._links.values()) + list(self._extra_links)
+        for link in links:  # graceful leave on every direct link
+            try:
+                with link.wlock:
+                    link.sock.sendall(bye)
+            except OSError:
+                pass
+        try:
+            with self._wlock:
+                self._sock.sendall(bye)  # the relay re-broadcasts the bye
+        except OSError:
+            pass
+        if self._router is not None:
+            self._router.soft_close()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+        for link in links:
+            try:
+                link.sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                link.sock.close()
+            except OSError:
+                pass
+        self._reader.join(timeout=2.0)
+        self._acceptor.join(timeout=2.0)
+        self._hb.join(timeout=2.0)
+        self._mon.join(timeout=2.0)
+        for link in links:
+            if link.reader is not None:
+                link.reader.join(timeout=1.0)
+        if self._router is not None:
+            self._router.join(timeout=2.0)
+
+    def __enter__(self) -> "SocketTransport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ------------------------------------------------- legacy star (baseline)
+
+class _StarRouter(threading.Thread):
+    """LEGACY rank-0 frame switch *and* failure detector — the old
+    hub-and-spoke data plane, kept only as :class:`RouterTransport`'s
+    router so ``benchmarks/comm_bench.py`` can measure the baseline the
+    p2p plane replaced.
 
     Accepts one connection per rank (hello = the 4-byte rank), then forwards
     every ``[len][src][dst][taglen][tag][payload]`` frame to ``dst``'s
@@ -777,15 +1697,11 @@ class _Router(threading.Thread):
                 pass
 
 
-class SocketTransport(_LockedMailboxes):
-    """Cross-process TCP transport (the ROADMAP's multi-host ChannelHub).
-
-    Star topology over a localhost (or LAN) rendezvous: rank 0 binds
-    ``port`` and runs the :class:`_Router`; every rank dials it.  ``post``
-    encodes the message with the canonical wire codec and writes one frame;
-    a dedicated receiver thread drains the socket into local mailboxes, so
-    ``poll`` is a pure dict lookup — non-blocking, as the comm thread's
-    test loop requires."""
+class RouterTransport(_LockedMailboxes):
+    """LEGACY hub-and-spoke TCP transport — every frame is forwarded
+    through rank 0's :class:`_StarRouter`.  Kept verbatim as the measured
+    baseline for ``benchmarks/comm_bench.py``; all production paths use
+    the peer-to-peer :class:`SocketTransport`."""
 
     def __init__(
         self,
@@ -802,33 +1718,15 @@ class SocketTransport(_LockedMailboxes):
         heartbeat_timeout: float | None = None,
     ):
         super().__init__()
-        # Resolve the heartbeat knobs (ISSUE 8).  ``heartbeat`` is the short
-        # spelling, ``heartbeat_interval`` the original one — passing both is
-        # ambiguous.  Precedence: explicit kwarg > REPRO_HB_INTERVAL env >
-        # 0.5 s default.  The staleness window defaults to 20 heartbeats so
-        # the historical 0.5 s → 10 s pairing is preserved; an explicit
-        # ``heartbeat_timeout`` wins over ``staleness_factor``.
-        if heartbeat is not None and heartbeat_interval is not None:
-            raise ValueError("pass heartbeat= or heartbeat_interval=, not both")
-        if heartbeat_timeout is not None and staleness_factor is not None:
-            raise ValueError("pass heartbeat_timeout= or staleness_factor=, not both")
-        interval = heartbeat if heartbeat is not None else heartbeat_interval
-        if interval is None:
-            env = os.environ.get("REPRO_HB_INTERVAL", "").strip()
-            interval = float(env) if env else 0.5
-        if interval <= 0.0:
-            raise ValueError(f"heartbeat interval must be > 0, got {interval}")
-        if heartbeat_timeout is None:
-            factor = 20.0 if staleness_factor is None else staleness_factor
-            if factor <= 1.0:
-                raise ValueError(f"staleness_factor must be > 1, got {factor}")
-            heartbeat_timeout = interval * factor
+        interval, heartbeat_timeout = _resolve_hb_knobs(
+            heartbeat, staleness_factor, heartbeat_interval, heartbeat_timeout
+        )
         self.rank, self.size, self.host = rank, size, host
         self._received = 0
         self._closed = False
-        self._router: Optional[_Router] = None
+        self._router: Optional[_StarRouter] = None
         if rank == 0:
-            self._router = _Router(host, port, size, heartbeat_timeout=heartbeat_timeout)
+            self._router = _StarRouter(host, port, size, heartbeat_timeout=heartbeat_timeout)
             self._router.start()
             port = self._router.port
         elif port == 0:
@@ -971,7 +1869,7 @@ class SocketTransport(_LockedMailboxes):
         if self._router is not None:
             self._router.join(timeout=2.0)
 
-    def __enter__(self) -> "SocketTransport":
+    def __enter__(self) -> "RouterTransport":
         return self
 
     def __exit__(self, *exc) -> None:

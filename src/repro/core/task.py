@@ -352,7 +352,9 @@ class TaskView:
         if cell is None or graph is None:
             raise RuntimeError(
                 "then() requires a task inserted through the codelet frontend "
-                "(sp_task / SpCodelet), which records a result cell"
+                "(sp_task / SpCodelet), which records a result cell; a "
+                "result=False (fire-and-forget) call has none — chain off a "
+                "written cell instead"
             )
         from .access import AccessMode, SpAccess, SpData
 

@@ -13,6 +13,13 @@ is replayed bit-for-bit by rerunning the same seed:
   is exact and the reduction is order-independent: every iteration must
   be **bit-exact** against the NumPy sum, faults or not.
 
+* :func:`chaos_collectives_p2p` — the same bit-exactness soak over the
+  *real* p2p data plane (ISSUE 10): one ``SocketTransport`` per rank,
+  frames over direct TCP peer links, each rank's injector scoped with
+  ``peers=`` to its ring neighbor's stream — drops/dupes/delays/
+  truncations land on the direct links themselves, not on a legacy
+  router path.
+
 * :func:`chaos_elastic` — the in-process elastic-training story: thread
   ranks drive ``SpRuntime(elastic=True).elastic_loop``; at a seeded step
   a seeded victim rank dies mid-collective (its death is published via
@@ -106,6 +113,86 @@ def chaos_collectives(
     stats = {"iters": iters, "size": size, "faults": dict(faulty.injected),
              "retries": transport.retries, "escalations": transport.escalations}
     assert stats["escalations"] == 0, stats  # absorbed, never escalated
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Scenario 1b: collectives under link faults on the real p2p data plane.
+# ---------------------------------------------------------------------------
+
+def chaos_collectives_p2p(
+    seed: int,
+    iters: int = 20,
+    *,
+    size: int = 3,
+    n: int = 96,
+    timeout: float = 60.0,
+) -> dict:
+    """Soak ring all-reduce over *direct TCP peer links*: one
+    :class:`~repro.core.comm.SocketTransport` per rank (in-process
+    threads, real sockets), each wrapped in a :class:`FaultyTransport`
+    whose injection is scoped via ``peers=`` to that rank's ring
+    neighbor — the stream the collective actually uses — under a
+    :class:`RetryingTransport` budget.  Every iteration must reduce
+    bit-exactly; no fault may escalate to a death."""
+    from repro.core.comm import SocketTransport
+
+    base = [SocketTransport(0, size, port=0)]
+    for r in range(1, size):
+        base.append(SocketTransport(r, size, port=base[0].port))
+    faulties, transports = [], []
+    for r in range(size):
+        f = FaultyTransport(
+            base[r], seed=seed * size + r, drop=0.04, duplicate=0.04,
+            delay=0.04, delay_s=0.002, truncate=0.03,
+            peers=[(r + 1) % size],
+        )
+        faulties.append(f)
+        transports.append(RetryingTransport(f, max_retries=6, backoff=0.001))
+    results: dict[tuple[int, int], np.ndarray] = {}
+    errors: list[BaseException] = []
+
+    def worker(rank: int) -> None:
+        group = SpCommGroup(rank, size, transports[rank],
+                            default_timeout=timeout)
+        try:
+            with SpRuntime(workers=2) as rt:
+                for it in range(iters):
+                    x = SpData(_int_grad(rank, it, n), f"cp{rank}.{it}")
+                    ring_all_reduce(rt.graph, group, x, op="sum", tag=it)
+                    rt.wait_all_tasks(timeout=timeout)
+                    results[(rank, it)] = np.asarray(x.value)
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(r,)) for r in range(size)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=iters * timeout)
+    if errors:
+        raise errors[0]
+    for it in range(iters):
+        ref = np.sum([_int_grad(r, it, n) for r in range(size)], axis=0)
+        for rank in range(size):
+            got = results.get((rank, it))
+            assert got is not None, f"rank {rank} lost iteration {it}"
+            np.testing.assert_array_equal(got, ref.astype(np.float32))
+    stats = {
+        "iters": iters, "size": size,
+        "faults": {k: sum(f.injected[k] for f in faulties)
+                   for k in faulties[0].injected},
+        "retries": sum(t.retries for t in transports),
+        "escalations": sum(t.escalations for t in transports),
+        "links": sum(b.stats().get("links", 0) for b in base),
+    }
+    for tr in transports:
+        tr.close()
+    assert stats["escalations"] == 0, stats  # absorbed, never escalated
+    assert stats["links"] >= size, stats  # frames really took direct links
+    assert stats["faults"]["dropped"] + stats["faults"]["duplicated"] > 0, (
+        "the seeded schedule never exercised the direct links"
+    )
     return stats
 
 
@@ -251,6 +338,7 @@ def chaos_serve(seed: int, iters: int = 20, *, max_steps: int = 4000) -> dict:
 
 SCENARIOS = {
     "collectives": chaos_collectives,
+    "collectives_p2p": chaos_collectives_p2p,
     "elastic": chaos_elastic,
     "serve": chaos_serve,
 }

@@ -50,12 +50,22 @@ from repro.core.task import TaskView
 # ---------------------------------------------------------------------------
 
 @sp_task(read=("x",), write=("chunks",), name="ring.split")
-def _ring_split(x, chunks, *, n, meta):
-    """Scatter ``x`` into ``n`` flat chunks; stash shape/dtype in ``meta``."""
-    a = np.asarray(x)
+def _ring_split(x, chunks, *, n, pieces, meta):
+    """Scatter ``x`` into ``n`` rank-chunks of ``pieces`` pipeline pieces
+    each (``len(chunks) == n * pieces``, flat order); stash shape/dtype in
+    ``meta``."""
+    a = np.ascontiguousarray(np.asarray(x))
     meta["shape"], meta["dtype"] = a.shape, a.dtype
-    for ref, piece in zip(chunks, np.array_split(a.reshape(-1), n)):
-        ref.value = piece.copy()
+    k = 0
+    # contiguous 1-D slices: the cells hold zero-copy views into x's
+    # buffer, sent as-is by the scatter-gather wire path.  Nothing
+    # downstream mutates them in place (accumulate allocates, concat
+    # reads), and the final concat *rebinds* x.value rather than writing
+    # through it, so the aliasing is safe.
+    for part in np.array_split(a.reshape(-1), n):
+        for piece in np.array_split(part, pieces):
+            chunks[k].value = piece
+            k += 1
 
 
 @sp_task(read=("incoming",), write=("acc",), name="ring.acc")
@@ -87,6 +97,62 @@ def _ring_identity(x, *, wrap=False):
     return [x] if wrap else x
 
 
+def _pipeline_pieces(x, n_chunks: int, chunk_bytes, *, max_pieces: int = 32) -> int:
+    """How many fixed-size pipeline pieces each rank-chunk splits into.
+
+    Derived from the cell's value at insert time; every rank holds a
+    same-shaped array, so all ranks agree.  Cells whose value is produced
+    later in the graph fall back to one piece (no pipelining) — again on
+    every rank, so the wire tags still line up."""
+    if not chunk_bytes:
+        return 1
+    v = x.value if isinstance(x, SpData) else None
+    if v is None:
+        return 1
+    per_chunk = max(1, np.asarray(v).nbytes // max(n_chunks, 1))
+    return max(1, min(max_pieces, -(-per_chunk // int(chunk_bytes))))
+
+
+def _ring_reduce_scatter(graph, group, cells, pieces, tag) -> int:
+    """Reduce-scatter phase over ``cells`` (``S * pieces`` flat, as laid
+    out by ``_ring_split``).  After S−1 steps logical rank ``r`` owns the
+    fully-reduced chunk ``(r+1) % S`` (all its pieces); returns that index.
+
+    With ``pieces > 1`` the ring is *chunk pipelined*: every piece runs
+    its own independent send/recv/accumulate chain, so the comm thread
+    transfers piece ``p+1`` of a step while a worker is still reducing
+    piece ``p`` — transfer overlaps reduction across ring steps."""
+    S, r = group.logical_size, group.logical_rank
+    right, left = group.to_physical(r + 1), group.to_physical(r - 1)
+    for step in range(S - 1):
+        send_idx = (r - step) % S
+        recv_idx = (r - step - 1) % S
+        for p in range(pieces):
+            mpi_send(graph, group, cells[send_idx * pieces + p], dest=right,
+                     tag=("rar", tag, "rs", step, p))
+            tmp = SpData(None, f"ar{tag}.r{r}.rs{step}.p{p}")
+            mpi_recv(graph, group, tmp, src=left,
+                     tag=("rar", tag, "rs", step, p))
+            _ring_accumulate(tmp, cells[recv_idx * pieces + p],
+                             graph=graph, name=f"allreduce{tag}.acc{step}.{p}")
+    return (r + 1) % S
+
+
+def _ring_allgather_chunks(graph, group, cells, pieces, tag) -> None:
+    """All-gather phase: circulate the reduced chunks (rank ``r`` starts
+    owning chunk ``(r+1) % S``, the reduce-scatter postcondition)."""
+    S, r = group.logical_size, group.logical_rank
+    right, left = group.to_physical(r + 1), group.to_physical(r - 1)
+    for step in range(S - 1):
+        send_idx = (r + 1 - step) % S
+        recv_idx = (r - step) % S
+        for p in range(pieces):
+            mpi_send(graph, group, cells[send_idx * pieces + p], dest=right,
+                     tag=("rar", tag, "ag", step, p))
+            mpi_recv(graph, group, cells[recv_idx * pieces + p], src=left,
+                     tag=("rar", tag, "ag", step, p))
+
+
 def ring_all_reduce(
     graph: SpTaskGraph,
     group: SpCommGroup,
@@ -94,6 +160,7 @@ def ring_all_reduce(
     *,
     op: str = "sum",
     tag: int = 0,
+    chunk_bytes: Optional[int] = None,
 ) -> TaskView:
     """Insert a chunked ring all-reduce for ``x`` into ``graph``.
 
@@ -104,6 +171,13 @@ def ring_all_reduce(
     ``"sum"`` or ``"mean"``.  2·(S−1) hops per chunk — bandwidth-optimal.
     Re-issuing with a fresh ``tag`` per step is safe: drained mailboxes are
     pruned by the transport, so per-step keys do not accumulate.
+
+    ``chunk_bytes`` turns on chunk pipelining: each of the S rank-chunks
+    is further split into ~``chunk_bytes``-sized pieces that travel as
+    independent frames, so successive ring steps overlap transfer with
+    reduction (piece *p* of step *k+1* is in flight while piece *q* of
+    step *k* is still being accumulated).  Pass the same value on every
+    rank.
     """
     if op not in ("sum", "mean"):
         raise ValueError(f"unsupported op {op!r}; use 'sum' or 'mean'")
@@ -113,34 +187,15 @@ def ring_all_reduce(
     S, r = group.logical_size, group.logical_rank
     if S == 1:
         return _ring_identity(x, graph=graph, name=f"allreduce{tag}.id")
-    right, left = group.to_physical(r + 1), group.to_physical(r - 1)
-    chunks = [SpData(None, f"ar{tag}.r{r}.c{i}") for i in range(S)]
+    P = _pipeline_pieces(x, S, chunk_bytes)
+    cells = [SpData(None, f"ar{tag}.r{r}.c{i}") for i in range(S * P)]
     meta: dict = {}
 
-    _ring_split(x, chunks, n=S, meta=meta,
+    _ring_split(x, cells, n=S, pieces=P, meta=meta,
                 graph=graph, name=f"allreduce{tag}.split")
-
-    # reduce-scatter: after S-1 steps rank r owns the reduced chunk (r+1)%S
-    for step in range(S - 1):
-        send_idx = (r - step) % S
-        recv_idx = (r - step - 1) % S
-        mpi_send(graph, group, chunks[send_idx], dest=right,
-                 tag=("rar", tag, "rs", step))
-        tmp = SpData(None, f"ar{tag}.r{r}.rs{step}")
-        mpi_recv(graph, group, tmp, src=left, tag=("rar", tag, "rs", step))
-        _ring_accumulate(tmp, chunks[recv_idx],
-                         graph=graph, name=f"allreduce{tag}.acc{step}")
-
-    # all-gather: circulate the reduced chunks
-    for step in range(S - 1):
-        send_idx = (r + 1 - step) % S
-        recv_idx = (r - step) % S
-        mpi_send(graph, group, chunks[send_idx], dest=right,
-                 tag=("rar", tag, "ag", step))
-        mpi_recv(graph, group, chunks[recv_idx], src=left,
-                 tag=("rar", tag, "ag", step))
-
-    return _ring_concat(chunks, x, n=S, op=op, meta=meta,
+    _ring_reduce_scatter(graph, group, cells, P, tag)
+    _ring_allgather_chunks(graph, group, cells, P, tag)
+    return _ring_concat(cells, x, n=S, op=op, meta=meta,
                         graph=graph, name=f"allreduce{tag}.concat")
 
 
@@ -168,6 +223,85 @@ def ring_all_gather(
         mpi_recv(graph, group, slots[recv_idx], src=left,
                  tag=("rag", tag, step))
     return _ring_collect(slots, graph=graph, name=f"allgather{tag}.collect")
+
+
+def _ring_circulate_reduce(graph, group, cell, tag) -> None:
+    """Naive ring all-reduce of a single cell over ``group``: circulate
+    every rank's original value around the ring, accumulating each arrival
+    into ``cell``.  (G−1)·nbytes on the wire — used only for the inter-pod
+    stage of :func:`hierarchical_all_reduce`, where the payload is already
+    a ``1/pod_size`` shard."""
+    G, q = group.logical_size, group.logical_rank
+    if G == 1:
+        return
+    right, left = group.to_physical(q + 1), group.to_physical(q - 1)
+    orig = SpData(None, f"hc{tag}.r{q}.orig")
+    _ring_seed(cell, orig, graph=graph, name=f"hier{tag}.seed")
+    carry = orig
+    for step in range(G - 1):
+        mpi_send(graph, group, carry, dest=right, tag=("hir", tag, step))
+        nxt = SpData(None, f"hc{tag}.r{q}.s{step}")
+        mpi_recv(graph, group, nxt, src=left, tag=("hir", tag, step))
+        _ring_accumulate(nxt, cell, graph=graph, name=f"hier{tag}.acc{step}")
+        carry = nxt  # forward what we just received, keep the sum local
+
+
+def hierarchical_all_reduce(
+    graph: SpTaskGraph,
+    group: SpCommGroup,
+    x: SpData,
+    *,
+    pod_size: int,
+    op: str = "sum",
+    tag: int = 0,
+) -> TaskView:
+    """Eager pod-aware all-reduce over the task graph — the transport-level
+    mirror of :func:`hierarchical_psum`'s three stages:
+
+    1. intra-pod ring reduce-scatter (each pod member ends up owning one
+       pod-reduced chunk),
+    2. inter-pod all-reduce of that chunk across same-position members of
+       every pod (``1/pod_size`` of the bytes on the slow links),
+    3. intra-pod ring all-gather + concat back into ``x``.
+
+    ``group.members`` is laid out pod-major: members ``[k*pod_size,
+    (k+1)*pod_size)`` form pod ``k``.  Requires ``logical_size %
+    pod_size == 0``.  Bit-exact against a flat sum whenever the values are
+    exactly representable (e.g. integer-valued float32)."""
+    if op not in ("sum", "mean"):
+        raise ValueError(f"unsupported op {op!r}; use 'sum' or 'mean'")
+    S, r = group.logical_size, group.logical_rank
+    if S % pod_size != 0:
+        raise ValueError(
+            f"group size {S} is not divisible by pod_size {pod_size}"
+        )
+    if S == 1:
+        return _ring_identity(x, graph=graph, name=f"hierar{tag}.id")
+    pod, pos = r // pod_size, r % pod_size
+    n_pods = S // pod_size
+    intra = SpCommGroup(
+        group.rank, group.size, group.hub,
+        default_timeout=group.default_timeout,
+        members=[group.to_physical(pod * pod_size + j) for j in range(pod_size)],
+    )
+    inter = SpCommGroup(
+        group.rank, group.size, group.hub,
+        default_timeout=group.default_timeout,
+        members=[group.to_physical(k * pod_size + pos) for k in range(n_pods)],
+    )
+    cells = [SpData(None, f"har{tag}.r{r}.c{i}") for i in range(pod_size)]
+    meta: dict = {}
+    _ring_split(x, cells, n=pod_size, pieces=1, meta=meta,
+                graph=graph, name=f"hierar{tag}.split")
+    if pod_size > 1:
+        owned = _ring_reduce_scatter(graph, intra, cells, 1, ("h", tag))
+    else:
+        owned = 0
+    _ring_circulate_reduce(graph, inter, cells[owned], ("h", tag, pos))
+    if pod_size > 1:
+        _ring_allgather_chunks(graph, intra, cells, 1, ("h", tag))
+    return _ring_concat(cells, x, n=S, op=op, meta=meta,
+                        graph=graph, name=f"hierar{tag}.concat")
 
 
 # ---------------------------------------------------------------------------

@@ -27,12 +27,15 @@ Fault tolerance & recovery (ISSUE 6)
 The layer above scripts *pretend* failures; this section is the real
 data-plane story, verified end to end against killed OS processes:
 
-* **Detection** lives in ``repro.core.comm``: the ``SocketTransport`` star
-  heartbeats through its router, EOF-without-goodbye and stale heartbeats
-  both declare a rank dead, and the router broadcasts the death so every
-  survivor's pending *and* future requests addressed to that rank fail
-  with a typed :class:`~repro.core.SpRankDeadError` in O(heartbeat) —
-  dependent tasks cancel transitively, exactly as timeouts do.
+* **Detection** lives in ``repro.core.comm``: on the p2p data plane
+  (ISSUE 10) every rank heartbeats its *direct* peer links (plus the
+  rank-0 control link), so EOF-without-goodbye and stale heartbeats are
+  **peer-observed** — whichever rank sees the death first gossips a
+  ``dead`` notice over all its links and every survivor's pending *and*
+  future requests addressed to that rank fail with a typed
+  :class:`~repro.core.SpRankDeadError` in O(heartbeat) — dependent tasks
+  cancel transitively, exactly as timeouts do.  No router sits in the
+  detection path: killing rank 0 itself is detected the same way.
 
 * **Injection** — :class:`FaultyTransport` wraps any ``SpTransport`` and
   drops, delays, duplicates, or truncates messages and kills ranks on a
@@ -40,7 +43,9 @@ data-plane story, verified end to end against killed OS processes:
   :class:`~repro.core.SpCommTransientError` (a *retryable* link fault,
   distinct from rank death); duplicates are filtered by a receive-side
   ``(src, seq)`` dedup window, which is also what makes send retry
-  idempotent.
+  idempotent.  With ``peers=``, injection is scoped to the *per-peer
+  streams* named — posts to other destinations pass through untouched —
+  so chaos scenarios can shake exactly the direct links under test.
 
 * **Retry** — :class:`RetryingTransport` wraps a (possibly faulty)
   transport with a bounded exponential-backoff retry budget for transient
@@ -291,6 +296,13 @@ class FaultyTransport(SpTransport):
       raise ``SpCommTransientError``, then the rank recovers — the
       flaky-then-recovering peer a retry budget must absorb.
 
+    ``peers`` (optional) restricts injection to posts whose *destination*
+    is in the set — the per-peer-stream scoping the p2p data plane needs:
+    posts to any other rank bypass the PRNG entirely (no draws consumed,
+    no wrap), so the fault schedule on the named streams is independent
+    of traffic elsewhere.  ``kill_plan`` ordinals likewise count only
+    posts on the named streams.
+
     ``injected`` counts every fault by kind.  All wrapped payloads are
     ``(_WRAP, src, seq, msg)`` tuples; :meth:`poll` unwraps, so wrap and
     unwrap must happen on the same layer — wrap *both* ends of a link (or
@@ -309,8 +321,10 @@ class FaultyTransport(SpTransport):
         kill_plan: Optional[dict[int, int]] = None,
         flaky: Optional[dict[int, int]] = None,
         dedup_window: int = 4096,
+        peers: Optional[Sequence[int]] = None,
     ):
         self.inner = inner
+        self._peers = None if peers is None else frozenset(peers)
         self._rng = random.Random(seed)
         self._p = {"drop": drop, "duplicate": duplicate,
                    "delay": delay, "truncate": truncate}
@@ -338,6 +352,9 @@ class FaultyTransport(SpTransport):
 
     def post(self, key: tuple, msg: Any) -> None:
         src, dst, _tag = key
+        if self._peers is not None and dst not in self._peers:
+            self.inner.post(key, msg)  # off-stream: untouched, no draws
+            return
         with self._lock:
             ordinal = self._post_ordinal
             self._post_ordinal += 1

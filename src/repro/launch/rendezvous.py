@@ -3,8 +3,10 @@
 This is the ``launch``-side of the ROADMAP's "Multi-host ChannelHub": spin
 up one OS process per rank, hand each a
 :class:`~repro.core.comm.SocketTransport` dialed into a shared localhost
-rendezvous (rank 0 binds the port and runs the frame router; every rank —
-including rank 0 — connects to it), and drive the *same* non-blocking
+rendezvous (rank 0 binds the port and runs the *address exchange*; every
+rank — including rank 0 — registers its own data listener there, then
+frames flow over lazily dialed direct peer links), and drive the *same*
+non-blocking
 comm-task protocol that the in-process :class:`~repro.core.comm.ChannelHub`
 exercises — ``ring_all_reduce`` built from ``mpi_send`` / ``mpi_recv``
 tasks, progressed by each process's comm thread.
@@ -43,6 +45,7 @@ __all__ = [
     "bootstrap_transport",
     "elastic_train_oracle",
     "reroll_ranks",
+    "run_collective",
     "run_elastic_ring",
     "run_elastic_train",
     "run_ring_reduce",
@@ -59,15 +62,25 @@ def bootstrap_transport(
     max_dial_retries: int = 100,
     heartbeat_interval: float | None = None,
     heartbeat_timeout: float | None = None,
+    transport: str = "p2p",
 ):
-    """Create this rank's :class:`SocketTransport`: rank 0 binds ``port``
-    and routes, everyone dials.  The dial loop is bounded: at most
-    ``max_dial_retries`` attempts with exponential backoff inside
-    ``timeout`` seconds, then a ``SpCommError`` naming the rendezvous
-    address."""
-    from repro.core.comm import SocketTransport
+    """Create this rank's transport: rank 0 binds ``port`` as the
+    rendezvous, everyone dials.  ``transport`` selects the wire
+    implementation — ``"p2p"`` (the direct-dial data plane,
+    :class:`SocketTransport`) or ``"router"`` (the legacy star
+    :class:`RouterTransport`, kept as the comm-bench baseline).  The dial
+    loop is bounded: at most ``max_dial_retries`` attempts with
+    exponential backoff inside ``timeout`` seconds, then a ``SpCommError``
+    naming the rendezvous address."""
+    from repro.core.comm import RouterTransport, SocketTransport
 
-    return SocketTransport(
+    try:
+        cls = {"p2p": SocketTransport, "router": RouterTransport}[transport]
+    except KeyError:
+        raise ValueError(
+            f"unknown transport {transport!r}; use 'p2p' or 'router'"
+        ) from None
+    return cls(
         rank,
         size,
         host=host,
@@ -274,6 +287,104 @@ def run_ring_reduce(
     return results
 
 
+def _collective_worker(rank, size, port, n, kind, kwargs, q, port_q=None) -> None:
+    """One rank of :func:`run_collective`: reduce a deterministic
+    integer-valued float32 vector (bit-exactness is by construction) with
+    the requested collective and report the result + transport stats."""
+    from repro.core import (
+        SpCommGroup,
+        SpComputeEngine,
+        SpData,
+        SpTaskGraph,
+        SpWorkerTeamBuilder,
+    )
+    from repro.dist.collectives import hierarchical_all_reduce, ring_all_reduce
+
+    transport = bootstrap_transport(rank, size, port=port)
+    if rank == 0 and port_q is not None:
+        port_q.put(transport.port)
+    eng = SpComputeEngine(SpWorkerTeamBuilder.team_of_cpu_workers(2))
+    try:
+        group = SpCommGroup(rank, size, transport, default_timeout=120.0)
+        tg = SpTaskGraph(trace=False).compute_on(eng)
+        x = SpData(_det_grad(rank, 0, n), f"coll{rank}")
+        if kind == "ring":
+            ring_all_reduce(tg, group, x, **kwargs)
+        elif kind == "hier":
+            hierarchical_all_reduce(tg, group, x, **kwargs)
+        else:
+            raise ValueError(f"unknown collective kind {kind!r}")
+        tg.wait_all_tasks()
+        q.put((rank, x.value, transport.stats()))
+    finally:
+        eng.stop()
+        transport.close()
+
+
+def run_collective(
+    size: int,
+    n: int = 4099,
+    *,
+    kind: str = "ring",
+    timeout: float = 240.0,
+    **kwargs,
+) -> dict:
+    """Spawn ``size`` rank processes over the p2p transport and run one
+    collective (``kind="ring"`` → :func:`ring_all_reduce` with e.g.
+    ``chunk_bytes=...``; ``kind="hier"`` → :func:`hierarchical_all_reduce`
+    with ``pod_size=...``).  Inputs are :func:`_det_grad` per rank —
+    integer-valued float32, so results are bit-exact against any
+    honest-sum oracle.  Returns ``{rank: {"value", "stats"}}``."""
+    ctx = mp.get_context("spawn")
+    q: Any = ctx.Queue()
+    port_q: Any = ctx.Queue()
+    procs = [
+        ctx.Process(
+            target=_collective_worker,
+            args=(0, size, 0, n, kind, kwargs, q, port_q),
+            daemon=True,
+        )
+    ]
+    procs[0].start()
+    try:
+        port = port_q.get(timeout=timeout)
+    except _queue.Empty:
+        procs[0].terminate()
+        raise TimeoutError(f"rank 0 did not bind a rendezvous port within {timeout}s")
+    for r in range(1, size):
+        p = ctx.Process(
+            target=_collective_worker,
+            args=(r, size, port, n, kind, kwargs, q),
+            daemon=True,
+        )
+        procs.append(p)
+        p.start()
+    results: dict[int, dict] = {}
+    deadline = time.monotonic() + timeout
+    try:
+        while len(results) < size and time.monotonic() < deadline:
+            try:
+                rank, value, stats = q.get(timeout=1.0)
+            except _queue.Empty:
+                if any(p.exitcode not in (None, 0) for p in procs):
+                    raise RuntimeError(
+                        "a rank process died: "
+                        + str([(p.name, p.exitcode) for p in procs])
+                    )
+                continue
+            results[rank] = {"value": value, "stats": stats}
+    finally:
+        for p in procs:
+            p.join(timeout=10.0)
+            if p.is_alive():  # pragma: no cover - hung rank
+                p.terminate()
+    if len(results) < size:
+        raise TimeoutError(
+            f"only {len(results)}/{size} ranks reported within {timeout}s"
+        )
+    return results
+
+
 def _elastic_worker(
     rank: int,
     size: int,
@@ -356,9 +467,15 @@ def run_elastic_ring(
     timeout: float = 180.0,
     kill_delay: float = 0.02,
     victim_hold_s: float = 2.0,
+    victim: int | None = None,
 ) -> tuple[dict, dict]:
-    """Spawn ``size`` rank processes, SIGKILL the highest rank as it enters
-    step ``fail_at``'s all-reduce, and return the survivors' reports.
+    """Spawn ``size`` rank processes, SIGKILL ``victim`` (default: the
+    highest rank) as it enters step ``fail_at``'s all-reduce, and return
+    the survivors' reports.
+
+    ``victim=0`` kills the rendezvous rank itself — legal on the p2p data
+    plane, where the address book is already distributed and the survivors
+    detect the death over their *direct* links (no router in the path).
 
     Returns ``(results, info)``: ``results[rank]`` is each survivor's
     report from :func:`_elastic_worker`; ``info`` records the victim and
@@ -366,16 +483,18 @@ def run_elastic_ring(
     detection latency is ``report["detect_at"] - info["t_kill"]``
     (CLOCK_MONOTONIC is machine-wide on Linux)."""
     if size < 3:
-        raise ValueError("need >= 3 ranks: the victim must not be the router")
-    victim = size - 1  # never rank 0 — the router dies with it
+        raise ValueError("need >= 3 ranks: two survivors must agree on the dead set")
+    if victim is None:
+        victim = size - 1
     ctx = mp.get_context("spawn")
     q: Any = ctx.Queue()
     progress_q: Any = ctx.Queue()
     port_q: Any = ctx.Queue()
+    hold0 = (fail_at, victim_hold_s) if victim == 0 else None
     procs = [
         ctx.Process(
             target=_elastic_worker,
-            args=(0, size, 0, n, steps, q, progress_q, port_q),
+            args=(0, size, 0, n, steps, q, progress_q, port_q, 3.0, hold0),
             daemon=True,
         )
     ]

@@ -1,0 +1,309 @@
+"""The peer-to-peer data plane (ISSUE 10): 8-OS-process collectives checked
+bit-exact against a ``lax.psum`` oracle, lazy-dial connection caching,
+scatter-gather frame roundtrips for every wire-type code, and SIGKILL
+death detection with no router in the path (the victim *is* the
+rendezvous rank)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import SocketTransport, SpSerializer, register_wire_type
+from repro.core.comm import (
+    _SEGMENT_MIN_BYTES,
+    SpDeserializer,
+    decode_message,
+    encode_segments,
+)
+from repro.launch.rendezvous import (
+    _det_grad,
+    run_collective,
+    run_elastic_ring,
+)
+
+# 8 rank processes timeshare the CI container's core; raise the per-test cap.
+pytestmark = pytest.mark.timeout(300)
+
+
+def _psum_oracle(size: int, n: int) -> np.ndarray:
+    """The all-reduce ground truth from jax itself: vmap over a stacked
+    per-rank axis, ``lax.psum`` across it.  Inputs are integer-valued
+    float32 (< 2**24), so any honest sum matches bit-for-bit regardless
+    of accumulation order."""
+    import jax
+
+    stacked = np.stack([_det_grad(r, 0, n) for r in range(size)])
+    out = jax.vmap(lambda x: jax.lax.psum(x, "i"), axis_name="i")(stacked)
+    return np.asarray(out[0])
+
+
+# ---------------------------------------------------------------------------
+# 8 OS processes, direct peer links, vs the lax.psum oracle
+# ---------------------------------------------------------------------------
+
+def test_eight_process_ring_all_reduce_chunked_vs_psum_oracle():
+    """8 spawned ranks ring-all-reduce float32[4099] with chunk pipelining
+    (2 KiB pieces: many in-flight piece frames per ring step) over direct
+    TCP links; every rank must match the psum oracle bit-for-bit, and the
+    transport stats must show a full mesh of direct links with rank 0
+    carrying no relay traffic."""
+    size, n = 8, 4099
+    expected = _psum_oracle(size, n)
+    results = run_collective(size, n, kind="ring", chunk_bytes=2048)
+    assert set(results) == set(range(size))
+    for rank, rep in results.items():
+        got = np.asarray(rep["value"])
+        assert got.dtype == np.float32
+        np.testing.assert_array_equal(got, expected)
+        st = rep["stats"]
+        assert st["boxes"] == 0 and st["queued"] == 0
+        assert st["received"] == st["delivered"] > 0
+    # ring traffic dials at most the two neighbours per rank — a star would
+    # concentrate 2*(size-1) relayed links on rank 0
+    assert results[0]["stats"]["links"] <= 4
+
+
+def test_eight_process_hierarchical_all_reduce_vs_psum_oracle():
+    """8 spawned ranks, two pods of 4: intra-pod reduce-scatter, inter-pod
+    ring over pod leaders-per-chunk, intra-pod all-gather.  Same oracle,
+    same bit-exactness bar as the flat ring."""
+    size, n = 8, 4099
+    expected = _psum_oracle(size, n)
+    results = run_collective(size, n, kind="hier", pod_size=4)
+    assert set(results) == set(range(size))
+    for rank, rep in results.items():
+        got = np.asarray(rep["value"])
+        assert got.dtype == np.float32
+        np.testing.assert_array_equal(got, expected)
+        assert rep["stats"]["boxes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# lazy dial + connection cache
+# ---------------------------------------------------------------------------
+
+def _drain(tr, key, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        ok, msg = tr.poll(key)
+        if ok:
+            return msg
+        time.sleep(0.002)
+    raise TimeoutError(f"nothing arrived for {key}")
+
+
+def test_lazy_dial_and_connection_cache():
+    """Links are dialed on first use and cached: repeat posts to the same
+    peer reuse the link, a reply reuses the *accepted* link (no dial on
+    the receiver's side), and self-posts never touch the wire."""
+    t0 = SocketTransport(0, 3)
+    t1 = SocketTransport(1, 3, port=t0.port)
+    t2 = SocketTransport(2, 3, port=t0.port)
+    try:
+        # rendezvous done, no data sent: nobody has dialed a peer link yet
+        assert t0.stats()["dials"] == 0
+        assert t1.stats()["dials"] == 0
+
+        t0.post((0, 0, "self"), 42)  # self-delivery: local mailbox, no link
+        assert _drain(t0, (0, 0, "self")) == 42
+        assert t0.stats()["dials"] == 0 and t0.stats()["links"] == 0
+
+        t0.post((0, 1, "a"), 1)  # first frame to rank 1: dial once
+        assert _drain(t1, (0, 1, "a")) == 1
+        assert t0.stats()["dials"] == 1
+
+        for i in range(5):  # cached link: no further dials
+            t0.post((0, 1, ("a", i)), i)
+        for i in range(5):
+            assert _drain(t1, (0, 1, ("a", i))) == i
+        assert t0.stats()["dials"] == 1
+
+        # the reply direction reuses the accepted link: rank 1 never dials
+        t1.post((1, 0, "b"), 2)
+        assert _drain(t0, (1, 0, "b")) == 2
+        assert t1.stats()["dials"] == 0 and t1.stats()["links"] >= 1
+
+        t0.post((0, 2, "c"), 3)  # a second peer: exactly one more dial
+        assert _drain(t2, (0, 2, "c")) == 3
+        assert t0.stats()["dials"] == 2 and t0.stats()["links"] >= 2
+    finally:
+        t2.close()
+        t1.close()
+        t0.close()
+
+
+# ---------------------------------------------------------------------------
+# scatter-gather frames: every wire-type code roundtrips
+# ---------------------------------------------------------------------------
+
+class _Grid:
+    """``sp_serialize`` path (code ``O``)."""
+
+    def __init__(self, values):
+        self.values = values
+
+    def sp_serialize(self, s: SpSerializer) -> None:
+        s.append_array(self.values)
+
+    @classmethod
+    def sp_deserialize(cls, d: SpDeserializer) -> "_Grid":
+        return cls(d.next_array())
+
+
+class _Blob:
+    """``comm_buffer`` path (code ``C``)."""
+
+    def __init__(self, raw: bytes):
+        self.raw = raw
+
+    def comm_buffer(self) -> bytes:
+        return self.raw
+
+    @classmethod
+    def from_comm_buffer(cls, buf: bytes) -> "_Blob":
+        return cls(bytes(buf))
+
+
+register_wire_type(_Grid)
+register_wire_type(_Blob)
+
+
+def _wire_values():
+    """One value per type code: N b I J F S B T L D A O C."""
+    big = np.arange(1024, dtype=np.float32)  # 4 KiB: a memoryview segment
+    return {
+        "N": None,
+        "b": True,
+        "I": -(1 << 62),
+        "J": 1 << 80,  # beyond int64: the decimal-string encoding
+        "F": 2.5,
+        "S": "naïve ∑",  # non-ascii: utf-8 length, not char count
+        "B": b"\x00\xff raw",
+        "T": (1, "two", None),
+        "L": [False, 3.0, b"x"],
+        "D": {"k": (1, 2), 7: "v"},
+        "A": big,
+        "O": _Grid(np.full((3, 5), 9.0)),
+        "C": _Blob(b"opaque-bytes"),
+    }
+
+
+def _assert_same(got, want):
+    if isinstance(want, np.ndarray):
+        assert got.dtype == want.dtype and np.array_equal(got, want)
+    elif isinstance(want, _Grid):
+        assert isinstance(got, _Grid)
+        np.testing.assert_array_equal(got.values, want.values)
+    elif isinstance(want, _Blob):
+        assert isinstance(got, _Blob) and got.raw == want.raw
+    elif isinstance(want, tuple):
+        assert isinstance(got, tuple) and len(got) == len(want)
+        for g, w in zip(got, want):
+            _assert_same(g, w)
+    elif isinstance(want, list):
+        assert isinstance(got, list) and len(got) == len(want)
+        for g, w in zip(got, want):
+            _assert_same(g, w)
+    elif isinstance(want, dict):
+        assert isinstance(got, dict) and set(got) == set(want)
+        for k in want:
+            _assert_same(got[k], want[k])
+    else:
+        assert type(got) is type(want) and got == want
+
+
+@pytest.mark.parametrize("code", sorted(_wire_values()))
+def test_scatter_gather_roundtrip_per_wire_type(code):
+    """encode_segments → join → decode_message is the identity for every
+    type code the codec speaks, and the segment total matches the joined
+    length (what ``sendmsg`` is told equals what hits the wire)."""
+    value = _wire_values()[code]
+    segs, nbytes = encode_segments(value)
+    joined = b"".join(bytes(s) for s in segs)
+    assert len(joined) == nbytes
+    _assert_same(decode_message(joined), value)
+
+
+def test_large_arrays_travel_as_zero_copy_segments():
+    """An array at/above the segment threshold must appear in the segment
+    list as a memoryview of the *source* buffer — the sendmsg path never
+    copies the payload — while a sub-threshold array is a plain bytes
+    chunk (one iovec beats a tiny zero-copy view)."""
+    big = np.arange(_SEGMENT_MIN_BYTES // 4, dtype=np.float32)
+    segs, _ = encode_segments({"g": big})
+    views = [s for s in segs if isinstance(s, memoryview)]
+    assert len(views) == 1
+    assert np.shares_memory(np.frombuffer(views[0], dtype=np.float32), big)
+
+    small = np.arange(4, dtype=np.float32)
+    segs_small, _ = encode_segments({"g": small})
+    assert all(isinstance(s, bytes) for s in segs_small)
+
+
+def test_decode_from_writable_buffer_is_zero_copy():
+    """Decoding from a writable buffer (the p2p receive path hands each
+    frame a private bytearray/np buffer) must alias the frame for large
+    arrays — no copy — and the result must be writable in place.
+    Immutable ``bytes`` input still gets a private copy."""
+    big = np.arange(2048, dtype=np.float32)
+    frame = bytearray(b"".join(bytes(s) for s in encode_segments(big)[0]))
+    out = decode_message(frame)
+    assert out.flags.writeable
+    assert np.shares_memory(out, np.frombuffer(frame, dtype=np.uint8))
+
+    out_copy = decode_message(bytes(frame))
+    assert out_copy.flags.writeable  # consumers may mutate either way
+    assert not np.shares_memory(
+        out_copy, np.frombuffer(bytes(frame), dtype=np.uint8)
+    )
+    np.testing.assert_array_equal(out, big)
+    np.testing.assert_array_equal(out_copy, big)
+
+
+# ---------------------------------------------------------------------------
+# SIGKILL the rendezvous rank: detection over direct links only
+# ---------------------------------------------------------------------------
+
+def test_sigkill_rank0_detected_without_router():
+    """SIGKILL rank 0 — the rendezvous rank itself — mid-collective.  On
+    the star this was fatal (the router died with it); on the p2p plane
+    the address book is already distributed and the survivors detect the
+    death over their *direct* links, re-mesh, and finish bit-exact."""
+    n, steps = 257, 4
+    results, info = run_elastic_ring(
+        size=3, n=n, steps=steps, fail_at=2, victim=0
+    )
+    assert info["victim"] == 0
+    assert set(results) == {1, 2}
+
+    bases = [
+        np.random.default_rng(r).standard_normal(n).astype(np.float32)
+        for r in range(3)
+    ]
+    full = bases[0] + bases[1] + bases[2]
+    surviving = bases[1] + bases[2]
+
+    resumes = {rep["resume_step"] for rep in results.values()}
+    assert len(resumes) == 1, f"survivors disagree on the resume step: {resumes}"
+    resume = resumes.pop()
+    assert resume is not None and 0 <= resume < steps
+
+    for rank, rep in results.items():
+        assert rep["dead"] == [0]
+        assert rep["members"] == [1, 2]
+        # detection is peer-observed (heartbeat staleness / link EOF on a
+        # direct link), not a router relaying a death notice
+        latency = rep["detect_at"] - info["t_kill"]
+        assert -0.05 < latency < 5.0, f"rank {rank}: detection took {latency}s"
+        assert sorted(rep["steps"]) == list(range(steps))
+        for step, arr in rep["steps"].items():
+            if step < resume:  # full-mesh steps: 3-way sums, order-dependent
+                np.testing.assert_allclose(arr, full, rtol=1e-5, atol=1e-6)
+            else:  # shrunken mesh: 2-way float32 sums are bit-exact
+                np.testing.assert_array_equal(arr, surviving)
+    for step in results[1]["steps"]:
+        np.testing.assert_array_equal(
+            results[1]["steps"][step], results[2]["steps"][step]
+        )
